@@ -1,0 +1,80 @@
+"""Paper Fig. 7: KV-cache compression across 32 layers — cross-token
+clustering + exponent delta vs plain bit-plane baseline, LZ4 and ZSTD.
+
+Two data sources, reported separately (DESIGN.md §5):
+  * calibrated 32-layer surrogate suite (rho chosen so the BASELINE ZSTD
+    ratio lands in the paper's 1.21–1.33 band before any proposed numbers
+    are read off);
+  * KV harvested from this repo's own briefly-trained smollm-smoke model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_table, harvest_model_kv, pct
+from repro.core.bitplane import BF16
+from repro.core.compressed_store import StoreConfig, compress_kv
+from repro.core.surrogates import layer_kv_suite
+
+
+def _suite_ratios(layers, codec, kv_cluster, decorrelate="delta"):
+    cfg = StoreConfig(codec=codec, kv_cluster=kv_cluster, decorrelate=decorrelate)
+    ratios, logical, stored = [], 0, 0
+    for kv in layers:
+        ct = compress_kv(kv, BF16, cfg)
+        ratios.append(ct.ratio)
+        logical += ct.logical_bytes
+        stored += ct.stored_bytes
+    return np.array(ratios), logical / stored
+
+
+def run(n_layers: int = 32, tokens: int = 2048, channels: int = 1024) -> dict:
+    out = {}
+    for task in ("wikitext", "booksum"):
+        layers = layer_kv_suite(n_layers, tokens, channels, task=task)
+        rows = []
+        for codec in ("zstd", "lz4"):
+            base_r, base_overall = _suite_ratios(layers, codec, kv_cluster=False)
+            prop_r, prop_overall = _suite_ratios(layers, codec, kv_cluster=True)
+            rows.append([
+                codec,
+                f"{base_overall:.2f}", f"{prop_overall:.2f}",
+                f"{prop_r.max():.2f}",
+                pct(1 - 1 / prop_overall),
+                pct(prop_overall / base_overall - 1),
+            ])
+            out[f"{task}_{codec}"] = {
+                "baseline": base_overall, "proposed": prop_overall,
+                "peak_layer": float(prop_r.max()),
+                "footprint_saving": 1 - 1 / prop_overall,
+            }
+        print(f"\n== Fig. 7 ({task}-like surrogate, {n_layers} layers) ==")
+        print(fmt_table(rows, ["codec", "baseline", "clustered+delta",
+                               "peak layer", "footprint", "improvement"]))
+    print("paper: zstd baseline 1.21/1.33 -> proposed 1.81/1.88 "
+          "(+50.3%/+41.7%), footprint -44.8%/-46.9%, peaks 2.69/2.10")
+
+    # --- the repo's own model KV (truth-in-labeling source) ---------------
+    layers = harvest_model_kv(tokens=512, train_steps=60)
+    base_r, base_o = _suite_ratios(layers, "zstd", kv_cluster=False)
+    prop_r, prop_o = _suite_ratios(layers, "zstd", kv_cluster=True)
+    print(f"\n[model-harvested KV (smollm-smoke, 60 train steps)] "
+          f"zstd baseline {base_o:.2f} -> clustered+delta {prop_o:.2f} "
+          f"({pct(prop_o / base_o - 1)} improvement)")
+    out["model_kv"] = {"baseline": base_o, "proposed": prop_o}
+
+    # --- de-correlation ablation (delta vs xor vs none) -------------------
+    layers = layer_kv_suite(8, 1024, 512, task="wikitext")
+    abl = []
+    for mode in ("delta", "xor", "none"):
+        _, overall = _suite_ratios(layers, "zstd", True, decorrelate=mode)
+        abl.append([mode, f"{overall:.2f}"])
+        out[f"ablation_{mode}"] = overall
+    print("\n== de-correlation ablation (zstd, clustering on) ==")
+    print(fmt_table(abl, ["mode", "overall ratio"]))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Fig. 8: per-bit-plane compressibility — weights (BF16/FP8/INT4)
+and KV cache.  Exponent planes dominate the win; lossy-quantized formats
+lose the redundancy."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_table
+from repro.core.bitplane import BF16, FP8_E4M3, INT4
+from repro.core.compressed_store import StoreConfig, compress_kv, compress_weights
+from repro.core.surrogates import (
+    gaussian_weights,
+    logmag_kv_cache,
+    quantized_weights_fp8,
+    quantized_weights_int4,
+)
+
+
+def _plane_ratios(ct):
+    stored = ct.plane_stored_bytes().astype(float)
+    logical = ct.plane_logical_bytes().astype(float)
+    return logical / np.maximum(stored, 1)
+
+
+def run() -> dict:
+    cfg = StoreConfig(codec="zstd")
+    out = {}
+    shape = (2048, 4096)
+    cases = {
+        "weights bf16": (compress_weights(gaussian_weights(shape, seed=1), BF16, cfg), BF16),
+        "weights fp8": (compress_weights(quantized_weights_fp8(shape, seed=1), FP8_E4M3, cfg), FP8_E4M3),
+        "weights int4": (compress_weights(quantized_weights_int4(shape, seed=1), INT4, cfg), INT4),
+        "kv bf16 (wikitext-like)": (
+            compress_kv(logmag_kv_cache(2048, 1024, rope_frac=0.5, seed=2), BF16, cfg), BF16),
+        "kv bf16 (booksum-like)": (
+            compress_kv(logmag_kv_cache(2048, 1024, rho=0.999, rope_frac=0.5, seed=3), BF16, cfg), BF16),
+    }
+    rows = []
+    for name, (ct, spec) in cases.items():
+        pr = _plane_ratios(ct)
+        head = " ".join(f"{r:4.1f}" for r in pr[: min(8, spec.bits)])
+        tail = " ".join(f"{r:4.1f}" for r in pr[min(8, spec.bits):])
+        rows.append([name, f"{ct.ratio:.2f}", head, tail])
+        out[name] = {"overall": ct.ratio, "per_plane": pr.tolist()}
+        if spec is BF16:
+            exp_mean = pr[1:9].mean()
+            man_mean = pr[9:].mean()
+            out[name]["exp_over_mantissa"] = float(exp_mean / man_mean)
+    print("\n== Fig. 8: per-plane ZSTD ratios (plane 0 = sign/MSB) ==")
+    print(fmt_table(rows, ["tensor", "overall", "planes 0-7", "planes 8+"]))
+    print("paper: BF16 top-4 exponent planes dominate (overall 1.34); "
+          "FP8/INT4 show little per-plane redundancy; KV exponent planes "
+          "compress strongly")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Kernel-level bandwidth proportionality (the device half of the paper's
+claim): bytes the bitplane kernels fetch per precision, plus interpret-mode
+correctness timing (NOT wall-clock perf — CPU interpret only)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from benchmarks.common import fmt_table, pct
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    from repro.kernels.bitplane_matmul import ops as mm
+    w = jnp.asarray(rng.normal(0, 0.02, (1024, 512)).astype(ml_dtypes.bfloat16))
+    x = jnp.asarray(rng.normal(0, 1, (64, 1024)).astype(ml_dtypes.bfloat16))
+    planes = mm.pack_weights(w)
+    full = 1024 * 512 * 2
+    rows = []
+    for keep in (16, 12, 8, 6, 4):
+        fetch = mm.weight_fetch_bytes(planes, keep)
+        y = mm.bitplane_matmul(x, planes, keep=keep)
+        ref = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+        rows.append([f"bf16->top{keep}", f"{fetch:,}", pct(fetch / full),
+                     f"{rel:.4f}"])
+        out[f"matmul_keep{keep}"] = {"fetch_frac": fetch / full, "rel_err": rel}
+    print("\n== bitplane_matmul: weight HBM bytes vs precision ==")
+    print(fmt_table(rows, ["precision", "fetch bytes", "of bf16", "rel err"]))
+
+    from repro.kernels.paged_attention import ops as pa
+    B, S, Hkv, rep, hd = 1, 256, 2, 2, 64
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)).astype(ml_dtypes.bfloat16))
+    kp = pa.pack_kv_planes(k)
+    full_kv = 2 * B * S * Hkv * hd * 2
+    rows = []
+    for name, ladder in {
+        "all bf16": ((0, 256, 16),),
+        "top16/mid8/rest4": ((0, 64, 16), (64, 192, 8), (192, 256, 4)),
+        "all fp8-ish": ((0, 256, 8),),
+    }.items():
+        fetch = pa.kv_fetch_bytes(kp, ladder)
+        rows.append([name, f"{fetch:,}", pct(fetch / full_kv)])
+        out[f"kv_{name}"] = fetch / full_kv
+    print("\n== paged_attention: KV HBM bytes vs ladder ==")
+    print(fmt_table(rows, ["ladder", "fetch bytes", "of bf16"]))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""§Roofline: the three-term analysis per (arch × shape × mesh), read from
+the dry-run's JSONL output (results/dryrun_all.jsonl by default).
+
+Run the sweep first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --json results/dryrun_all.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import fmt_table
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "dryrun_all.jsonl",
+)
+
+
+def load(path: str = DEFAULT_PATH) -> list:
+    if not os.path.exists(path):
+        return []
+    rows = []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    rows = list(seen.values())
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def run(path: str = DEFAULT_PATH) -> dict:
+    rows = load(path)
+    if not rows:
+        print(f"[roofline] no dry-run results at {path}; run the sweep first")
+        return {}
+    table = []
+    for r in rows:
+        table.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{r['t_compute_s'] * 1e3:9.2f}",
+            f"{r['t_memory_s'] * 1e3:9.2f}",
+            f"{r['t_collective_s'] * 1e3:9.2f}",
+            r["bottleneck"],
+            f"{r['useful_flops_frac']:.2f}",
+            f"{r['mfu_bound']:.3f}",
+        ])
+    print("\n== §Roofline: three-term analysis (ms per step, per device) ==")
+    print(fmt_table(table, ["arch", "shape", "mesh", "t_comp", "t_mem",
+                            "t_coll", "bound", "useful", "mfu_bound"]))
+    by_bound = {}
+    for r in rows:
+        by_bound[r["bottleneck"]] = by_bound.get(r["bottleneck"], 0) + 1
+    print(f"bottleneck distribution: {by_bound}")
+    return {f"{r['arch']}/{r['shape']}/{r['mesh']}": r for r in rows}
+
+
+if __name__ == "__main__":
+    run()

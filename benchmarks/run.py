@@ -1,0 +1,64 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run           # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig7 table4
+    PYTHONPATH=src python -m benchmarks.run --fast    # reduced sizes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.table1_naive_compression", {}),
+    ("fig7", "benchmarks.fig7_kv_clustering",
+     {"fast": dict(n_layers=8, tokens=1024, channels=512),
+      "full": dict(n_layers=16, tokens=2048, channels=768)}),
+    ("table3", "benchmarks.table3_weight_compression", {}),
+    ("fig8", "benchmarks.fig8_bitplane_compressibility", {}),
+    ("table2", "benchmarks.table2_dynquant_quality", {"fast": dict(eval_tokens=16)}),
+    ("fig9", "benchmarks.fig9_precision_distribution", {}),
+    ("fig10", "benchmarks.fig10_dram_energy", {}),
+    ("fig11", "benchmarks.fig11_load_latency", {}),
+    ("table4", "benchmarks.table4_hardware_cost", {}),
+    ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
+    ("roofline", "benchmarks.roofline", {}),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, help="dump results as JSON")
+    args = ap.parse_args(argv)
+
+    results, failures = {}, []
+    for name, modpath, opts in MODULES:
+        if args.only and name not in args.only:
+            continue
+        kwargs = opts.get("fast", {}) if args.fast else opts.get("full", {})
+        t0 = time.time()
+        try:
+            mod = __import__(modpath, fromlist=["run"])
+            results[name] = mod.run(**kwargs)
+            print(f"[bench] {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"[bench] {name} FAILED: {e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    print(f"\n[bench] {len(results)} benchmarks ran, {len(failures)} failures")
+    for f_ in failures:
+        print("  FAIL", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Paper Table I: naive LZ4/ZSTD on raw (byte-layout) weights and KV.
+
+Claim reproduced: straightforward compression barely works — LZ4 ≈ 0 % on
+everything; ZSTD gets ~17–23 % on BF16 weights and ≤ 6.5 % on KV."""
+
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, pct
+from repro.core.bitplane import BF16
+from repro.core.compressed_store import StoreConfig, compress_kv, compress_weights
+from repro.core.surrogates import gaussian_weights, logmag_kv_cache
+
+MODELS = {
+    "llama8b-like": dict(shape=(4096, 4096), sigma=0.018),
+    "gemma2b-like": dict(shape=(2048, 2048), sigma=0.03),
+    "mistral7b-like": dict(shape=(4096, 4096), sigma=0.015),
+}
+
+
+def run() -> dict:
+    rows, out = [], {}
+    for name, spec in MODELS.items():
+        w = gaussian_weights(spec["shape"], sigma=spec["sigma"], seed=hash(name) % 100)
+        kv = logmag_kv_cache(2048, 512, rho=0.995, seed=hash(name) % 50)
+        cells = {}
+        for codec in ("lz4", "zstd"):
+            cfg = StoreConfig(codec=codec, layout="raw")
+            cells[f"w_{codec}"] = compress_weights(w, BF16, cfg).savings
+            cells[f"kv_{codec}"] = compress_kv(kv, BF16, cfg).savings
+        rows.append([
+            name, pct(cells["w_lz4"]), pct(cells["w_zstd"]),
+            pct(cells["kv_lz4"]), pct(cells["kv_zstd"]),
+        ])
+        out[name] = cells
+    print("\n== Table I: naive (byte-layout) lossless compression ==")
+    print(fmt_table(rows, ["model", "W lz4", "W zstd", "KV lz4", "KV zstd"]))
+    print("paper: weights lz4 0-18%, zstd 17-23%; KV lz4 0%, zstd 0.9-6.5%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

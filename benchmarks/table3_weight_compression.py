@@ -1,0 +1,54 @@
+"""Paper Table III: weight compression ratios by precision (BF16/FP8/INT4)
+with bit-plane + ZSTD, and total savings when stacked on lossy quantization.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, pct
+from repro.core.bitplane import BF16, FP8_E4M3, INT4
+from repro.core.compressed_store import StoreConfig, compress_weights
+from repro.core.surrogates import (
+    gaussian_weights,
+    quantized_weights_fp8,
+    quantized_weights_int4,
+)
+
+MODELS = {
+    "llama8b-like": (4096, 4096),
+    "llama70b-like": (8192, 8192),
+    "mixtral-like": (4096, 14336),
+}
+
+#: lossy savings vs BF16 (FP8 halves, INT4 quarters) — paper's framing
+LOSSY = {"bf16": 0.0, "fp8": 0.5, "int4": 0.75}
+
+
+def run() -> dict:
+    cfg = StoreConfig(codec="zstd")
+    rows, out = [], {}
+    for name, shape in MODELS.items():
+        seed = hash(name) % 97
+        variants = {
+            "bf16": (gaussian_weights(shape, seed=seed), BF16),
+            "fp8": (quantized_weights_fp8(shape, seed=seed), FP8_E4M3),
+            "int4": (quantized_weights_int4(shape, seed=seed), INT4),
+        }
+        for prec, (w, spec) in variants.items():
+            ct = compress_weights(w, spec, cfg)
+            lossless = ct.savings
+            total = 1 - (1 - LOSSY[prec]) * (1 - lossless)
+            rows.append([
+                name, prec, f"{ct.ratio:.2f}", pct(lossless), pct(total),
+            ])
+            out[f"{name}_{prec}"] = {
+                "ratio": ct.ratio, "lossless": lossless, "total": total,
+            }
+    print("\n== Table III: weight lossless ratios + stacked savings ==")
+    print(fmt_table(rows, ["model", "precision", "ratio", "lossless", "total"]))
+    print("paper: bf16 1.32-1.34 (24-26%), fp8 1.09-1.11 (8-10%, total ~54%), "
+          "int4 1.01-1.02 (1-2%, total ~75%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

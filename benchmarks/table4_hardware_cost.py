@@ -1,0 +1,43 @@
+"""Paper Table IV: silicon cost of the LZ4/ZSTD engines at 2 GHz × 32 lanes
+(analytic model calibrated to the paper's ASAP7 synthesis), plus the
+throughput sanity check against the serving path's bandwidth demand."""
+
+from __future__ import annotations
+
+from benchmarks.common import fmt_table
+from repro.memsim.hardware import CompressionEngineModel
+
+
+def run() -> dict:
+    rows, out = [], {}
+    for eng in ("lz4", "zstd"):
+        m = CompressionEngineModel(eng)
+        for bb in (16384, 32768, 65536):
+            pp = m.paper_total(bb)
+            fit = m.single_lane(bb)
+            rows.append([
+                eng, bb,
+                f"{pp['sl_area_mm2']:.5f}", f"{fit['area_mm2']:.5f}",
+                f"{pp['sl_power_mw']:.0f}", f"{fit['power_mw']:.0f}",
+                f"{pp['tot_area_mm2']:.3f}", f"{pp['agg_thpt_tbs']:.2f}",
+            ])
+            out[f"{eng}_{bb}"] = {
+                "paper_sl_area": pp["sl_area_mm2"], "model_sl_area": fit["area_mm2"],
+                "paper_sl_power": pp["sl_power_mw"], "model_sl_power": fit["power_mw"],
+                "tot_area": pp["tot_area_mm2"], "agg_tbs": pp["agg_thpt_tbs"],
+            }
+    print("\n== Table IV: compression-engine silicon cost (2 GHz, 32 lanes) ==")
+    print(fmt_table(rows, ["engine", "block bits", "SL area (paper)",
+                           "SL area (fit)", "SL mW (paper)", "SL mW (fit)",
+                           "32-lane mm2", "agg TB/s"]))
+    # Bandwidth adequacy: decode of a 70B bf16 model at 100 tok/s needs
+    # ~140 GB/s × compression ratio of decompressed output.
+    demand = 140 * 1.34
+    ok = CompressionEngineModel("zstd").sustains_bandwidth(demand, 32768)
+    print(f"2 TB/s aggregate >= {demand:.0f} GB/s decode demand: {ok}")
+    out["bandwidth_adequate"] = ok
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Serving with the compression-aware memory path: batched requests through
+the engine with (a) compressed paged KV storage and (b) a Quest-style
+dynamic-quantization ladder controlling KV fetch precision.
+
+    PYTHONPATH=src python examples/serve_dynamic_quant.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.quantization import PrecisionLadder
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.engine import Request
+from repro.serving.sampler import SamplerConfig
+
+PROMPTS = [
+    b"The compression-aware memory controller reorganizes",
+    b"Key-value caches grow with sequence length until",
+    b"Bit-plane disaggregation stores the sign bits together and",
+    b"Dynamic quantization assigns high precision to critical pages and",
+]
+
+
+def main():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer(cfg.vocab)
+
+    ladder = PrecisionLadder([(4, 16), (4, 12), (-1, 8)])
+    eng = ServingEngine(
+        model, params,
+        EngineConfig(max_batch=8, max_ctx=256, ladder=ladder,
+                     sampler=SamplerConfig(temperature=0.8, top_k=40)),
+    )
+
+    reqs = [
+        Request(rid=i, prompt=tok.encode(p), max_new_tokens=24)
+        for i, p in enumerate(PROMPTS)
+    ]
+    t0 = time.time()
+    eng.run(reqs, rng_seed=7)
+    dt = time.time() - t0
+
+    for r in reqs:
+        body = tok.decode_bytes(np.array(r.output))
+        print(f"[req {r.rid}] +{len(r.output)} tokens: {body[:48]!r}")
+
+    rep = eng.report()
+    print(f"\n[serve] {rep['decode_tokens']:.0f} decode tokens in {dt:.1f}s "
+          f"({rep.get('decode_tok_per_s', 0):.1f} tok/s on CPU)")
+    print(f"[serve] KV capacity saving (clustered+delta+zstd store): "
+          f"{rep.get('kv_capacity_saving', 0):.1%}")
+    print(f"[serve] KV bandwidth saving (ladder partial-plane fetch): "
+          f"{rep.get('kv_bandwidth_saving', 0):.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Dev script: one loss/prefill/decode pass per smoke arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.model import build_model, demo_batch
+
+ok, bad = [], []
+for arch in ARCH_IDS:
+    try:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        seq = 64
+        batch = demo_batch(cfg, key, 2, seq)
+        loss = jax.jit(model.loss)(params, batch)
+        assert jnp.isfinite(loss), f"{arch}: loss not finite: {loss}"
+        pre_batch = {k: v for k, v in batch.items() if k != "labels"}
+        logits, cache = jax.jit(model.prefill)(params, pre_batch)
+        assert jnp.all(jnp.isfinite(logits)), f"{arch}: prefill logits NaN"
+        # pad cache to max_len for decode
+        from repro.models.model import prepare_decode_cache
+        max_len = seq + 8 + (cfg.n_patches if cfg.family == "vlm" else 0)
+        cache = prepare_decode_cache(cfg, cache, max_len)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, cache2 = jax.jit(model.decode)(params, tok, cache)
+        assert jnp.all(jnp.isfinite(logits2)), f"{arch}: decode logits NaN"
+        n_params = sum(p.size for p in jax.tree.leaves(params))
+        print(f"PASS {arch:18s} loss={float(loss):.3f} params={n_params:,}")
+        ok.append(arch)
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        print(f"FAIL {arch}: {e}")
+        traceback.print_exc()
+        bad.append(arch)
+
+print(f"\n{len(ok)}/{len(ARCH_IDS)} pass")
+sys.exit(1 if bad else 0)

@@ -1,0 +1,24 @@
+"""Lossless block codecs used by the compression-aware memory controller.
+
+The paper evaluates LZ4 and ZSTD with 4 KB compression blocks (Section IV.A).
+``zstd`` wraps the real ``zstandard`` library (bitstream-exact with the paper's
+tooling); ``lz4`` is a from-scratch implementation of the LZ4 *block format*
+(there is no lz4 binding in this environment, and the paper's premise is that
+the codec is simple enough to live in a memory controller — implementing it is
+part of the reproduction).
+"""
+
+from repro.compression.interface import (
+    Codec,
+    get_codec,
+    available_codecs,
+    register_codec,
+)
+from repro.compression import lz4, zstd  # noqa: F401  (register built-ins)
+
+__all__ = [
+    "Codec",
+    "get_codec",
+    "available_codecs",
+    "register_codec",
+]

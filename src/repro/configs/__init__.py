@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    ARCH_IDS,
+    ModelConfig,
+    ShapeCell,
+    all_configs,
+    arch_shapes,
+    get_config,
+)

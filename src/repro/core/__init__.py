@@ -1,0 +1,32 @@
+"""Core library: the paper's contribution as composable modules.
+
+- :mod:`repro.core.bitplane` — bit-plane disaggregation (§III.A)
+- :mod:`repro.core.kv_clustering` — cross-token clustering + de-correlation (§III.B)
+- :mod:`repro.core.quantization` — dynamic quantization policies (§II.C)
+- :mod:`repro.core.compressed_store` — block store (Fig. 5 layout)
+- :mod:`repro.core.controller` — memory-controller functional model (Fig. 4)
+- :mod:`repro.core.surrogates` — statistically matched experiment data
+"""
+
+from repro.core.bitplane import (  # noqa: F401
+    BF16,
+    FP16,
+    FP32,
+    FP8_E4M3,
+    FP8_E5M2,
+    INT4,
+    INT8,
+    FloatSpec,
+    SPECS,
+)
+from repro.core.compressed_store import (  # noqa: F401
+    CompressedTensor,
+    StoreConfig,
+    compress_kv,
+    compress_weights,
+    decompress_kv,
+    decompress_weights,
+    measure_ratio,
+)
+from repro.core.controller import MemoryController  # noqa: F401
+from repro.core.quantization import PrecisionLadder, RouterPolicy  # noqa: F401

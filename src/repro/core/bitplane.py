@@ -1,0 +1,214 @@
+"""Bit-plane disaggregation (paper §III.A).
+
+A block of ``m`` n-bit values is reorganised so that bit position ``i`` of all
+values is stored contiguously (bit-plane ``P_i``), creating a bit-level
+column-store.  Plane 0 is the MOST significant bit (sign), plane n-1 the least
+significant mantissa bit, so "fetch the top-k planes" is ``planes[:k]`` —
+exactly the partial-plane dynamic-quantization fetch of Fig. 5.
+
+Two implementations with identical semantics:
+
+* a NumPy path (``*_np``) used by the host-side compressed store /
+  checkpointing / benchmarks (operates on byte buffers), and
+* a jnp path used inside jitted device code (serving step, kernel oracles).
+
+A property test (tests/test_bitplane.py) pins the two paths to each other and
+to round-trip identity for every supported format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatSpec:
+    """Bit layout of a storage format: 1 sign + E exponent + F mantissa bits.
+
+    Integer formats use ``exp_bits=0`` (the exponent-delta transform becomes a
+    no-op for them, mirroring the paper's INT4/INT8 rows in Table III).
+    """
+
+    name: str
+    bits: int
+    exp_bits: int
+    man_bits: int
+
+    def __post_init__(self):
+        assert self.bits in (4, 8, 16, 32)
+        if self.exp_bits:
+            assert 1 + self.exp_bits + self.man_bits == self.bits
+
+    @property
+    def exp_mask(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def uint_np(self):
+        return {4: np.uint8, 8: np.uint8, 16: np.uint16, 32: np.uint32}[self.bits]
+
+    @property
+    def uint_jnp(self):
+        return {4: jnp.uint8, 8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[self.bits]
+
+    @property
+    def value_np(self):
+        """NumPy dtype whose raw bits this spec describes (None for int4)."""
+        return {
+            "bf16": ml_dtypes.bfloat16,
+            "fp16": np.float16,
+            "fp32": np.float32,
+            "fp8_e4m3": ml_dtypes.float8_e4m3fn,
+            "fp8_e5m2": ml_dtypes.float8_e5m2,
+            "int8": np.int8,
+            "int4": None,
+        }.get(self.name)
+
+
+BF16 = FloatSpec("bf16", 16, 8, 7)
+FP16 = FloatSpec("fp16", 16, 5, 10)
+FP32 = FloatSpec("fp32", 32, 8, 23)
+FP8_E4M3 = FloatSpec("fp8_e4m3", 8, 4, 3)
+FP8_E5M2 = FloatSpec("fp8_e5m2", 8, 5, 2)
+INT8 = FloatSpec("int8", 8, 0, 0)
+INT4 = FloatSpec("int4", 4, 0, 0)
+
+SPECS = {s.name: s for s in (BF16, FP16, FP32, FP8_E4M3, FP8_E5M2, INT8, INT4)}
+
+
+def spec_for_dtype(dtype) -> FloatSpec:
+    dtype = np.dtype(dtype) if not isinstance(dtype, str) else dtype
+    table = {
+        np.dtype(ml_dtypes.bfloat16): BF16,
+        np.dtype(np.float16): FP16,
+        np.dtype(np.float32): FP32,
+        np.dtype(ml_dtypes.float8_e4m3fn): FP8_E4M3,
+        np.dtype(ml_dtypes.float8_e5m2): FP8_E5M2,
+        np.dtype(np.int8): INT8,
+        np.dtype(np.uint8): INT8,
+    }
+    try:
+        return table[dtype]
+    except KeyError:
+        raise ValueError(f"no FloatSpec for dtype {dtype}") from None
+
+
+# ---------------------------------------------------------------------------
+# NumPy path (host-side store)
+# ---------------------------------------------------------------------------
+
+
+def to_uint_np(x: np.ndarray, spec: FloatSpec) -> np.ndarray:
+    """Reinterpret values as their raw uint bit patterns, flattened."""
+    if spec.name == "int4":
+        x = np.asarray(x, np.uint8)
+        assert (x < 16).all(), "int4 values must be pre-packed into low nibble"
+        return x.reshape(-1)
+    return np.ascontiguousarray(x).view(spec.uint_np).reshape(-1)
+
+
+def from_uint_np(u: np.ndarray, spec: FloatSpec, shape) -> np.ndarray:
+    if spec.name == "int4":
+        return u.astype(np.uint8).reshape(shape)
+    return u.astype(spec.uint_np).view(spec.value_np or spec.uint_np).reshape(shape)
+
+
+def disaggregate_np(u: np.ndarray, bits: int) -> np.ndarray:
+    """(m,) uint -> (bits, m//8) uint8 planes, MSB-first. m must be %8 == 0."""
+    m = u.shape[0]
+    assert m % 8 == 0, f"bit-plane block length must be a multiple of 8, got {m}"
+    shifts = np.arange(bits - 1, -1, -1, dtype=u.dtype)
+    planes_bits = ((u[None, :] >> shifts[:, None]) & 1).astype(np.uint8)
+    return np.packbits(planes_bits, axis=1)  # MSB-first inside each byte
+
+
+def reaggregate_np(planes: np.ndarray, bits: int, keep: int | None = None) -> np.ndarray:
+    """(bits, m//8) uint8 planes -> (m,) uint.
+
+    ``keep`` < bits emulates a partial-plane fetch: only the top ``keep``
+    planes contribute; the rest are zero (truncation quantization).
+    """
+    keep = bits if keep is None else keep
+    m = planes.shape[1] * 8
+    out_dtype = np.uint32 if bits > 16 else (np.uint16 if bits > 8 else np.uint8)
+    u = np.zeros(m, dtype=np.uint32)
+    for i in range(keep):
+        bits_row = np.unpackbits(planes[i])
+        u |= bits_row.astype(np.uint32) << np.uint32(bits - 1 - i)
+    return u.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# jnp path (device-side, jittable)
+# ---------------------------------------------------------------------------
+
+_BYTE_WEIGHTS = tuple(1 << (7 - k) for k in range(8))
+
+
+def disaggregate(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(m,) uint -> (bits, m//8) uint8 planes, MSB-first (jittable)."""
+    m = u.shape[0]
+    assert m % 8 == 0
+    wide = u.astype(jnp.uint32)
+    shifts = jnp.arange(bits - 1, -1, -1, dtype=jnp.uint32)
+    planes_bits = (wide[None, :] >> shifts[:, None]) & 1  # (bits, m)
+    grouped = planes_bits.reshape(bits, m // 8, 8)
+    weights = jnp.array(_BYTE_WEIGHTS, dtype=jnp.uint32)
+    return (grouped * weights).sum(axis=-1).astype(jnp.uint8)
+
+
+def reaggregate(planes: jnp.ndarray, bits: int, keep: int | None = None) -> jnp.ndarray:
+    """(bits, m//8) uint8 -> (m,) uint (jittable). Static ``keep`` truncates."""
+    keep = bits if keep is None else keep
+    n_planes, mbytes = planes.shape
+    assert n_planes == bits
+    m = mbytes * 8
+    shifts8 = jnp.arange(7, -1, -1, dtype=jnp.uint32)
+    # (keep, m//8, 8) bit matrix of the planes we fetched.
+    fetched = planes[:keep].astype(jnp.uint32)
+    bits_mat = (fetched[:, :, None] >> shifts8[None, None, :]) & 1
+    bits_flat = bits_mat.reshape(keep, m)
+    plane_weights = jnp.array(
+        [1 << (bits - 1 - i) for i in range(keep)], dtype=jnp.uint32
+    )
+    u = (bits_flat * plane_weights[:, None]).sum(axis=0)
+    out_dtype = jnp.uint32 if bits > 16 else (jnp.uint16 if bits > 8 else jnp.uint8)
+    return u.astype(out_dtype)
+
+
+def to_uint(x: jnp.ndarray, spec: FloatSpec) -> jnp.ndarray:
+    if spec.name == "int4":
+        return x.astype(jnp.uint8).reshape(-1)
+    lax_dtype = {
+        "bf16": jnp.bfloat16,
+        "fp16": jnp.float16,
+        "fp32": jnp.float32,
+        "fp8_e4m3": jnp.float8_e4m3fn,
+        "fp8_e5m2": jnp.float8_e5m2,
+        "int8": jnp.int8,
+    }[spec.name]
+    return jax_bitcast(x.astype(lax_dtype), spec.uint_jnp).reshape(-1)
+
+
+def from_uint(u: jnp.ndarray, spec: FloatSpec, shape) -> jnp.ndarray:
+    if spec.name == "int4":
+        return u.reshape(shape)
+    lax_dtype = {
+        "bf16": jnp.bfloat16,
+        "fp16": jnp.float16,
+        "fp32": jnp.float32,
+        "fp8_e4m3": jnp.float8_e4m3fn,
+        "fp8_e5m2": jnp.float8_e5m2,
+        "int8": jnp.int8,
+    }[spec.name]
+    return jax_bitcast(u.astype(spec.uint_jnp), lax_dtype).reshape(shape)
+
+
+def jax_bitcast(x, dtype):
+    import jax.lax as lax
+
+    return lax.bitcast_convert_type(x, dtype)

@@ -1,0 +1,178 @@
+"""Cross-token KV cache clustering and de-correlation (paper §III.B).
+
+Three steps, each lossless and invertible:
+
+1. **Channel-wise grouping across tokens** (Fig. 6 ①): within a group of
+   ``group`` tokens (the paper uses 16, matching a Quest "page"), the KV
+   tensor is transposed from token-major ``(group, channels)`` to
+   channel-major ``(channels, group)`` so that the same embedding channel of
+   adjacent tokens lands contiguously in memory.
+
+2. **Exponent delta transform** (Fig. 6 ③, eq. 6-7): per channel, a base
+   exponent ``beta_j`` (the group minimum) is subtracted from every token's
+   exponent; the delta replaces the exponent field bit-for-bit.  Deltas are
+   small where adjacent tokens are similar, so the high-order exponent planes
+   become near-zero and compress extremely well.  One 8-bit base per channel
+   per group is the only metadata (the paper's "small header fields").
+
+3. **Bit-plane disaggregation + concatenation** (Fig. 6 ②, eq. 4-5) is then
+   applied by the block store (:mod:`repro.core.compressed_store`).
+
+The paper also mentions XOR de-correlation as an alternative; it is provided
+(``xor_encode``) and compared in the fig7 benchmark ablation.
+
+NumPy and jnp twins, as in :mod:`repro.core.bitplane`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitplane import FloatSpec
+
+DEFAULT_GROUP = 16  # tokens per group == paper's page size
+
+
+# ---------------------------------------------------------------------------
+# Step 1: channel-wise grouping (token-major <-> channel-major within groups)
+# ---------------------------------------------------------------------------
+
+
+def cluster_np(kv: np.ndarray, group: int = DEFAULT_GROUP) -> np.ndarray:
+    """(tokens, channels) -> (n_groups, channels, group), channel-major.
+
+    ``tokens`` must be a multiple of ``group`` (callers pad the tail group).
+    """
+    t, c = kv.shape
+    assert t % group == 0, f"token count {t} not a multiple of group {group}"
+    return np.ascontiguousarray(kv.reshape(t // group, group, c).transpose(0, 2, 1))
+
+
+def uncluster_np(grouped: np.ndarray) -> np.ndarray:
+    g, c, n = grouped.shape
+    return np.ascontiguousarray(grouped.transpose(0, 2, 1)).reshape(g * n, c)
+
+
+def cluster(kv: jnp.ndarray, group: int = DEFAULT_GROUP) -> jnp.ndarray:
+    t, c = kv.shape
+    assert t % group == 0
+    return kv.reshape(t // group, group, c).transpose(0, 2, 1)
+
+
+def uncluster(grouped: jnp.ndarray) -> jnp.ndarray:
+    g, c, n = grouped.shape
+    return grouped.transpose(0, 2, 1).reshape(g * n, c)
+
+
+# ---------------------------------------------------------------------------
+# Step 2: exponent delta transform (uint views, channel-major groups)
+# ---------------------------------------------------------------------------
+
+
+def exp_delta_encode_np(
+    u: np.ndarray, spec: FloatSpec
+) -> tuple[np.ndarray, np.ndarray]:
+    """Delta-encode exponents along the last (token) axis.
+
+    ``u``: (..., channels, group) raw uint view.  Returns (encoded, base)
+    where ``base`` is (..., channels) uint8 — the per-channel base exponent
+    beta_j (eq. 6).  Integer specs pass through unchanged with empty bases.
+    """
+    if spec.exp_bits == 0:
+        return u, np.zeros(u.shape[:-1], np.uint8)
+    exp = (u >> spec.man_bits) & spec.exp_mask
+    base = exp.min(axis=-1)
+    delta = exp - base[..., None]
+    encoded = (u & ~np.array(spec.exp_mask << spec.man_bits, u.dtype)) | (
+        delta.astype(u.dtype) << spec.man_bits
+    )
+    return encoded, base.astype(np.uint8)
+
+
+def exp_delta_decode_np(
+    encoded: np.ndarray, base: np.ndarray, spec: FloatSpec
+) -> np.ndarray:
+    if spec.exp_bits == 0:
+        return encoded
+    delta = (encoded >> spec.man_bits) & spec.exp_mask
+    exp = delta + base[..., None].astype(encoded.dtype)
+    return (encoded & ~np.array(spec.exp_mask << spec.man_bits, encoded.dtype)) | (
+        (exp & spec.exp_mask).astype(encoded.dtype) << spec.man_bits
+    )
+
+
+def exp_delta_encode(u: jnp.ndarray, spec: FloatSpec) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if spec.exp_bits == 0:
+        return u, jnp.zeros(u.shape[:-1], jnp.uint8)
+    exp = (u >> spec.man_bits) & spec.exp_mask
+    base = exp.min(axis=-1)
+    delta = exp - base[..., None]
+    field_mask = jnp.array(spec.exp_mask << spec.man_bits, u.dtype)
+    encoded = (u & ~field_mask) | (delta.astype(u.dtype) << spec.man_bits)
+    return encoded, base.astype(jnp.uint8)
+
+
+def exp_delta_decode(
+    encoded: jnp.ndarray, base: jnp.ndarray, spec: FloatSpec
+) -> jnp.ndarray:
+    if spec.exp_bits == 0:
+        return encoded
+    delta = (encoded >> spec.man_bits) & spec.exp_mask
+    exp = (delta + base[..., None].astype(encoded.dtype)) & spec.exp_mask
+    field_mask = jnp.array(spec.exp_mask << spec.man_bits, encoded.dtype)
+    return (encoded & ~field_mask) | (exp.astype(encoded.dtype) << spec.man_bits)
+
+
+# ---------------------------------------------------------------------------
+# Alternative de-correlation: XOR with the previous token (paper §III bullet 2)
+# ---------------------------------------------------------------------------
+
+
+def xor_encode_np(u: np.ndarray) -> np.ndarray:
+    """XOR each token with its predecessor along the last axis (first kept)."""
+    out = u.copy()
+    out[..., 1:] = u[..., 1:] ^ u[..., :-1]
+    return out
+
+
+def xor_decode_np(encoded: np.ndarray) -> np.ndarray:
+    return np.bitwise_xor.accumulate(encoded, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Full host-side pipeline helper (cluster -> delta), used by the block store
+# ---------------------------------------------------------------------------
+
+
+def cluster_and_encode_np(
+    kv_u: np.ndarray, spec: FloatSpec, group: int = DEFAULT_GROUP,
+    mode: str = "delta",
+) -> tuple[np.ndarray, np.ndarray]:
+    """(tokens, channels) uint view -> (encoded grouped uints, bases).
+
+    ``mode``: 'delta' (exponent delta, default), 'xor', or 'none' (grouping
+    only — the paper's grouping-without-de-correlation ablation).
+    """
+    grouped = cluster_np(kv_u, group)  # (G, C, group)
+    if mode == "delta":
+        return exp_delta_encode_np(grouped, spec)
+    if mode == "xor":
+        return xor_encode_np(grouped), np.zeros(grouped.shape[:-1], np.uint8)
+    if mode == "none":
+        return grouped, np.zeros(grouped.shape[:-1], np.uint8)
+    raise ValueError(f"unknown de-correlation mode {mode!r}")
+
+
+def decode_and_uncluster_np(
+    encoded: np.ndarray, base: np.ndarray, spec: FloatSpec, mode: str = "delta"
+) -> np.ndarray:
+    if mode == "delta":
+        grouped = exp_delta_decode_np(encoded, base, spec)
+    elif mode == "xor":
+        grouped = xor_decode_np(encoded)
+    elif mode == "none":
+        grouped = encoded
+    else:
+        raise ValueError(f"unknown de-correlation mode {mode!r}")
+    return uncluster_np(grouped)

@@ -1,0 +1,191 @@
+"""Context-dependent dynamic quantization (paper §II.C, Fig. 2, Table II).
+
+Two families of policy, both expressed so that the *memory* consequence is a
+plane count (how many bit-planes the controller fetches — Fig. 5):
+
+* **KV pages** (Quest-style, Table II): per 16-token page, an importance
+  score is computed from the current query and the page's per-channel min/max
+  key envelope; pages are ranked and assigned a precision ladder such as
+  "top 5 pages BF16, next 5 FP8, rest FP4".
+
+* **Weights** (MoDE-style, Fig. 2/9): a router assigns each block/expert a
+  precision from {BF16, FP12, FP8, FP6, FP4} (or {FP8, FP6, FP4} for FP8-based
+  models, {INT4, INT2} for INT4-based models); router layers always stay BF16.
+
+Mechanically, precision-p fetch of an n-bit format keeps the top p planes and
+zeroes the rest (truncation).  ``truncate_to_planes`` also offers
+round-to-nearest at *store* time ("plane-aware rounding"): adding half an ulp
+of the kept grid before truncation, which is free in the aggregator hardware
+and strictly reduces truncation error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitplane import FloatSpec, from_uint, to_uint
+
+# ---------------------------------------------------------------------------
+# Plane truncation (the memory-side meaning of "FP-k")
+# ---------------------------------------------------------------------------
+
+
+def truncate_uint(u, keep: int, spec: FloatSpec, round_nearest: bool = True):
+    """Zero the low (bits-keep) planes of raw uint values. jnp or numpy.
+
+    Round-to-nearest adds half of the dropped-ulp before masking.  The bit
+    pattern of a (positive or negative) IEEE float is monotone in magnitude,
+    so this rounds magnitude to nearest; the exponent field may legitimately
+    carry.  Values whose exponent is all-ones (inf/NaN) are never rounded to
+    avoid manufacturing NaNs.
+    """
+    xp = jnp if isinstance(u, jnp.ndarray) else np
+    drop = spec.bits - keep
+    if drop <= 0:
+        return u
+    mask = xp.array(~((1 << drop) - 1) & ((1 << spec.bits) - 1), u.dtype)
+    if not round_nearest or spec.exp_bits == 0:
+        return u & mask
+    half = xp.array(1 << (drop - 1), u.dtype)
+    exp_field = (u >> spec.man_bits) & spec.exp_mask
+    saturated = exp_field == spec.exp_mask  # inf/NaN: truncate only
+    # Detect carry-out beyond the format (rounding up the max finite value):
+    # adding `half` must not wrap the exponent into all-ones.
+    rounded = (u + half) & mask
+    rexp = (rounded >> spec.man_bits) & spec.exp_mask
+    overflow = rexp == spec.exp_mask
+    keep_trunc = saturated | overflow
+    return xp.where(keep_trunc, u & mask, rounded)
+
+
+def truncate_values(x, keep: int, spec: FloatSpec, round_nearest: bool = True):
+    """Value-space wrapper: x -> quantized x (same dtype). jnp only."""
+    u = to_uint(x, spec)
+    q = truncate_uint(u, keep, spec, round_nearest)
+    return from_uint(q, spec, x.shape)
+
+
+def truncation_rmse(x, keep: int, spec: FloatSpec) -> float:
+    """Relative RMSE of plane truncation — the quality proxy used by the
+    Table II reproduction (we cannot run LLaMA-8B perplexity offline)."""
+    x32 = np.asarray(x, np.float32)
+    q = np.asarray(truncate_values(jnp.asarray(x), keep, spec), np.float32)
+    denom = float(np.sqrt(np.mean(x32**2))) or 1.0
+    return float(np.sqrt(np.mean((x32 - q) ** 2))) / denom
+
+
+# ---------------------------------------------------------------------------
+# Quest-style KV page scoring (Table II)
+# ---------------------------------------------------------------------------
+
+
+def page_minmax(keys: jnp.ndarray, page: int = 16) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-page channel envelope.  keys: (tokens, heads, dim) ->
+    (pages, heads, dim) min and max.  tokens % page == 0 (pad upstream)."""
+    t, h, d = keys.shape
+    pages = keys.reshape(t // page, page, h, d)
+    return pages.min(axis=1), pages.max(axis=1)
+
+
+def quest_scores(q: jnp.ndarray, kmin: jnp.ndarray, kmax: jnp.ndarray) -> jnp.ndarray:
+    """Upper bound on |q.k| per page/head (Quest's criticality estimate).
+
+    q: (heads, dim); kmin/kmax: (pages, heads, dim) -> scores (pages, heads).
+    """
+    hi = jnp.maximum(q[None] * kmin, q[None] * kmax)
+    return hi.sum(axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionLadder:
+    """Ordered (count, planes) rungs; the final rung's count may be -1 = rest.
+
+    Paper Table II examples:
+      Ladder([(5, 16), (3, 8), (2, 4)])   top-5 BF16, next 3 FP8, next 2 FP4
+      Ladder([(5, 16), (5, 8)])           top-5 BF16, next 5 FP8, rest dropped
+    ``drop_rest=True`` evicts pages below the ladder (Quest-style top-k);
+    otherwise the rest get the last rung's precision.
+    """
+
+    rungs: Sequence[tuple[int, int]]
+    drop_rest: bool = False
+
+    def plane_assignment(self, order: jnp.ndarray, n_pages: int) -> jnp.ndarray:
+        """order: (pages,) page indices sorted by descending score ->
+        (pages,) planes-to-fetch per page (0 = dropped)."""
+        planes_by_rank = np.zeros(n_pages, np.int32)
+        r = 0
+        for count, planes in self.rungs:
+            count = n_pages - r if count < 0 else count
+            planes_by_rank[r : r + count] = planes
+            r += count
+            if r >= n_pages:
+                break
+        if r < n_pages and not self.drop_rest:
+            planes_by_rank[r:] = self.rungs[-1][1]
+        ranks = jnp.argsort(order)  # page index -> rank
+        return jnp.asarray(planes_by_rank)[ranks]
+
+
+def assign_page_precision(
+    scores: jnp.ndarray, ladder: PrecisionLadder
+) -> jnp.ndarray:
+    """scores: (pages, heads) -> planes (pages, heads) via per-head ranking."""
+    n_pages = scores.shape[0]
+    order = jnp.argsort(-scores, axis=0)  # (pages, heads) descending
+    per_head = []
+    for h in range(scores.shape[1]):
+        per_head.append(ladder.plane_assignment(order[:, h], n_pages))
+    return jnp.stack(per_head, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MoDE-style weight precision routing (Fig. 2 / Fig. 9)
+# ---------------------------------------------------------------------------
+
+#: plane counts for the named precisions the paper sweeps (BF16 base format).
+BF16_LADDER = {"bf16": 16, "fp12": 12, "fp8": 8, "fp6": 6, "fp4": 4}
+FP8_LADDER = {"fp8": 8, "fp6": 6, "fp4": 4}
+INT4_LADDER = {"int4": 4, "int2": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterPolicy:
+    """Maps router affinity quantiles to precisions (Fig. 2's router boxes).
+
+    ``thresholds`` are cumulative population fractions; e.g. with
+    precisions ('bf16','fp8','fp4') and thresholds (0.2, 0.6), the top 20 %
+    of blocks by router score stay BF16, the next 40 % drop to FP8 and the
+    remaining 40 % to FP4.  Router layers themselves always stay full
+    precision (paper §IV.B).
+    """
+
+    precisions: Sequence[str]
+    thresholds: Sequence[float]
+    ladder: dict = dataclasses.field(default_factory=lambda: dict(BF16_LADDER))
+
+    def assign(self, scores: np.ndarray) -> np.ndarray:
+        """scores: (blocks,) router affinities -> (blocks,) plane counts."""
+        n = scores.shape[0]
+        order = np.argsort(-scores)
+        planes = np.zeros(n, np.int32)
+        bounds = [0] + [int(t * n) for t in self.thresholds] + [n]
+        for i, prec in enumerate(self.precisions):
+            lo, hi = bounds[i], bounds[min(i + 1, len(bounds) - 1)]
+            planes[order[lo:hi]] = self.ladder[prec]
+        return planes
+
+    def distribution(self, scores: np.ndarray) -> dict[str, float]:
+        """Fraction of blocks at each precision (reproduces Fig. 9 bars)."""
+        planes = self.assign(scores)
+        out = {}
+        for prec in self.precisions:
+            out[prec] = float((planes == self.ladder[prec]).mean())
+        return out
+
+    def mean_bits(self, scores: np.ndarray) -> float:
+        return float(self.assign(scores).mean())

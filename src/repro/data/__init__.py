@@ -1,0 +1,9 @@
+"""Data pipeline: synthetic corpora, byte-level tokenization, deterministic
+sharded loaders with checkpointable state."""
+
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    ShardedLoader,
+    synthetic_corpus,
+)
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401

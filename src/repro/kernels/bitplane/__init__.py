@@ -1,0 +1,1 @@
+from repro.kernels.bitplane.ops import pack, unpack  # noqa: F401

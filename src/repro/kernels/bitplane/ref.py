@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the bit-plane pack/unpack kernels.
+
+Semantics pinned to :mod:`repro.core.bitplane` (`disaggregate_np` /
+`reaggregate_np`): plane 0 = MSB; bytes pack MSB-first along the value axis
+(numpy ``packbits`` convention).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_BYTE_W = tuple(1 << (7 - k) for k in range(8))
+
+
+def pack_ref(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(m,) uint32 -> (bits, m//8) uint8 planes, MSB-first."""
+    m = u.shape[0]
+    assert m % 8 == 0
+    wide = u.astype(jnp.uint32)
+    shifts = jnp.arange(bits - 1, -1, -1, dtype=jnp.uint32)
+    planes_bits = (wide[None, :] >> shifts[:, None]) & 1
+    grouped = planes_bits.reshape(bits, m // 8, 8)
+    weights = jnp.array(_BYTE_W, dtype=jnp.uint32)
+    return (grouped * weights).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack_ref(planes: jnp.ndarray, bits: int, keep: int | None = None) -> jnp.ndarray:
+    """(bits, m//8) uint8 -> (m,) uint32; ``keep`` < bits truncates (the
+    partial-plane fetch of Fig. 5)."""
+    keep = bits if keep is None else keep
+    n_planes, mbytes = planes.shape
+    assert n_planes == bits
+    m = mbytes * 8
+    shifts8 = jnp.arange(7, -1, -1, dtype=jnp.uint32)
+    fetched = planes[:keep].astype(jnp.uint32)
+    bits_mat = (fetched[:, :, None] >> shifts8[None, None, :]) & 1
+    bits_flat = bits_mat.reshape(keep, m)
+    plane_weights = jnp.array(
+        [1 << (bits - 1 - i) for i in range(keep)], dtype=jnp.uint32
+    )
+    return (bits_flat * plane_weights[:, None]).sum(axis=0).astype(jnp.uint32)

@@ -1,0 +1,1 @@
+from repro.kernels.bitplane_matmul.ops import bitplane_matmul, pack_weights  # noqa: F401

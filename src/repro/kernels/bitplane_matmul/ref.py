@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for bitplane_matmul.
+
+Weight-plane layout: planes (bits, K, N//8) uint8 — bit ``i`` (0 = MSB) of
+W[k, n] lives at planes[i, k, n//8] bit (7 - n%8) (packbits convention along
+the N axis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_weights_ref(w_u16: jnp.ndarray, bits: int = 16) -> jnp.ndarray:
+    """(K, N) uint raw bits -> (bits, K, N//8) uint8 planes."""
+    k, n = w_u16.shape
+    assert n % 8 == 0
+    w = w_u16.astype(jnp.uint32)
+    shifts = jnp.arange(bits - 1, -1, -1, dtype=jnp.uint32)
+    bm = (w[None] >> shifts[:, None, None]) & 1  # (bits, K, N)
+    grouped = bm.reshape(bits, k, n // 8, 8)
+    byte_w = jnp.array([1 << (7 - i) for i in range(8)], jnp.uint32)
+    return (grouped * byte_w).sum(-1).astype(jnp.uint8)
+
+
+def reconstruct_ref(planes: jnp.ndarray, keep: int, bits: int = 16) -> jnp.ndarray:
+    """planes -> (K, N) bf16 with the low (bits-keep) planes zeroed."""
+    b, k, n8 = planes.shape
+    shifts8 = jnp.arange(7, -1, -1, dtype=jnp.uint32)
+    bm = (planes[:keep].astype(jnp.uint32)[..., None] >> shifts8) & 1
+    bm = bm.reshape(keep, k, n8 * 8)
+    plane_w = jnp.array([1 << (bits - 1 - i) for i in range(keep)], jnp.uint32)
+    u = (bm * plane_w[:, None, None]).sum(0).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+
+
+import jax  # noqa: E402  (used by reconstruct_ref)
+
+
+def bitplane_matmul_ref(x: jnp.ndarray, planes: jnp.ndarray, keep: int,
+                        bits: int = 16) -> jnp.ndarray:
+    """x (M, K) bf16 × plane-stored W -> (M, N) f32."""
+    w = reconstruct_ref(planes, keep, bits)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

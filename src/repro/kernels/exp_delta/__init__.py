@@ -1,0 +1,1 @@
+from repro.kernels.exp_delta.ops import encode, decode  # noqa: F401

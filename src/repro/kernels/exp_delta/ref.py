@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the exponent-delta kernels — pinned to
+:mod:`repro.core.kv_clustering` (eq. 6–7)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bitplane import FloatSpec
+
+
+def encode_ref(u: jnp.ndarray, spec: FloatSpec):
+    """u: (C, G) uint32, channel-major group. Returns (encoded, base(C,))."""
+    if spec.exp_bits == 0:
+        return u, jnp.zeros(u.shape[:-1], jnp.uint32)
+    exp = (u >> spec.man_bits) & spec.exp_mask
+    base = exp.min(axis=-1)
+    delta = exp - base[..., None]
+    field = jnp.uint32(spec.exp_mask << spec.man_bits)
+    encoded = (u & ~field) | (delta << spec.man_bits)
+    return encoded, base
+
+
+def decode_ref(encoded: jnp.ndarray, base: jnp.ndarray, spec: FloatSpec):
+    if spec.exp_bits == 0:
+        return encoded
+    delta = (encoded >> spec.man_bits) & spec.exp_mask
+    exp = (delta + base[..., None]) & spec.exp_mask
+    field = jnp.uint32(spec.exp_mask << spec.man_bits)
+    return (encoded & ~field) | (exp << spec.man_bits)

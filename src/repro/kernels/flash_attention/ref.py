@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive full-matrix
+softmax attention with grouped-GQA head mapping and causal / sliding-window /
+bidirectional masks.  fp32 score math (the kernel matches to bf16-accum
+tolerance)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_len=None):
+    """q: (B, Sq, Hp, hd); k/v: (B, Skv, Hkv, hd), Hp % Hkv == 0.
+
+    Returns (B, Sq, Hp, hd) in q.dtype; positions are `arange` (train /
+    prefill semantics)."""
+    b, sq, hp, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hp // hkv
+    head_map = np.arange(hp) // rep
+    kh = k[:, :, head_map, :]
+    vh = v[:, :, head_map, :]
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kh.astype(jnp.float32)
+    ) / np.sqrt(hd)
+    q_idx = jnp.arange(sq)[:, None]
+    kv_idx = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if kv_len is not None:
+        ok &= kv_idx < kv_len
+    if causal:
+        ok &= kv_idx <= q_idx
+        if window > 0:
+            ok &= kv_idx > q_idx - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return o.astype(q.dtype)

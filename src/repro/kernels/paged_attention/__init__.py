@@ -1,0 +1,4 @@
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    ladder_paged_attention,
+    pack_kv_planes,
+)

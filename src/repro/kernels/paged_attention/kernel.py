@@ -1,0 +1,133 @@
+"""Paged decode attention over a bit-plane-packed KV cache (paper Fig. 5/6
+device path): one kernel invocation serves a contiguous page range at a
+fixed precision (``keep`` planes); the ops wrapper composes rungs of the
+Quest ladder (§II.C) and merges their online-softmax partials.
+
+HBM traffic per rung = keep/16 of the bf16 KV bytes in that range — the
+"memory bandwidth scales proportionally with dynamic quantization" claim,
+enforced structurally by the BlockSpec (planes keep..15 are never mapped).
+
+Grid (B, Hkv, S/bs), S innermost; scratch carries m/l/acc.  The kernel
+emits UNNORMALISED partials (o·l, m, l) so rungs merge exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _unpack_tile(p, keep: int, bits: int):
+    """(keep, bs, hd8) uint8 planes -> (bs, hd) bf16."""
+    byte_w = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 8), 3)
+    bm8 = (p.astype(jnp.uint32)[..., None] >> (7 - byte_w)) & 1
+    plane_w = jax.lax.broadcasted_iota(jnp.uint32, (keep, 1, 1, 1), 0)
+    u = (bm8 << ((bits - 1) - plane_w)).sum(axis=0)  # (bs, hd8, 8)
+    u16 = u.reshape(u.shape[0], -1).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+
+
+def _kernel(q_ref, kp_ref, vp_ref, mask_ref, o_ref, m_ref, l_ref,
+            m_scr, l_scr, acc_scr, *, keep: int, bits: int, scale: float,
+            n_s: int):
+    j = pl.program_id(2)
+    q = q_ref[...].reshape(q_ref.shape[2], q_ref.shape[3])  # (rep, hd)
+    # (keep, 1, bs, 1, hd8) -> (keep, bs, hd8)
+    kp = kp_ref[...].reshape(kp_ref.shape[0], kp_ref.shape[2], kp_ref.shape[4])
+    vp = vp_ref[...].reshape(vp_ref.shape[0], vp_ref.shape[2], vp_ref.shape[4])
+    k = _unpack_tile(kp, keep, bits)
+    v = _unpack_tile(vp, keep, bits)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (rep, bs)
+    ok = mask_ref[...].reshape(1, -1) > 0
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[:, 0] * corr + p.sum(axis=1)
+    acc = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+    acc_scr[...] = acc
+
+    @pl.when(j == n_s - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].reshape(o_ref.shape)  # unnormalised (o·l)
+        m_ref[...] = m_scr[:, :1].reshape(m_ref.shape)
+        l_ref[...] = l_scr[:, :1].reshape(l_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("keep", "bits", "bs", "interpret")
+)
+def paged_attention_rung(
+    q: jnp.ndarray,
+    k_planes: jnp.ndarray,
+    v_planes: jnp.ndarray,
+    mask: jnp.ndarray,
+    keep: int,
+    bits: int = 16,
+    bs: int = 128,
+    interpret: bool = True,
+):
+    """One precision rung over a page range.
+
+    q (B, Hkv, rep, hd) bf16; k/v_planes (bits, B, S, Hkv, hd//8) uint8;
+    mask (B, S) int8 (1 = valid token).  Returns unnormalised partials
+    (o (B, Hkv, rep, hd) f32, m (B, Hkv, rep) f32, l (B, Hkv, rep) f32)."""
+    b, hkv, rep, hd = q.shape
+    s_total = k_planes.shape[2]
+    bs = min(bs, s_total)
+    assert s_total % bs == 0
+    n_s = s_total // bs
+    grid = (b, hkv, n_s)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, keep=keep, bits=bits, scale=1.0 / np.sqrt(hd), n_s=n_s
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b_, h, j: (b_, h, 0, 0)),
+            # Top `keep` planes only — the partial-plane KV fetch.
+            pl.BlockSpec((keep, 1, bs, 1, hd // 8), lambda b_, h, j: (0, b_, j, h, 0)),
+            pl.BlockSpec((keep, 1, bs, 1, hd // 8), lambda b_, h, j: (0, b_, j, h, 0)),
+            pl.BlockSpec((1, bs), lambda b_, h, j: (b_, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, rep), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((1, 1, rep), lambda b_, h, j: (b_, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, rep, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, 128), jnp.float32),
+            pltpu.VMEM((rep, 128), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_planes, v_planes, mask)

@@ -1,0 +1,78 @@
+"""Ladder composition for bit-plane paged attention.
+
+``ladder_paged_attention`` runs one kernel call per precision rung (a
+contiguous, page-aligned KV range at ``keep`` planes) and merges the
+unnormalised online-softmax partials — mathematically identical to a single
+softmax over the mixed-precision KV (the ref oracle computes it that way).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import kernel as K
+from repro.kernels.paged_attention.ref import pack_kv_ref
+
+
+def pack_kv_planes(kv: jnp.ndarray, bits: int = 16) -> jnp.ndarray:
+    """(B, S, Hkv, hd) bf16 -> (bits, B, S, Hkv, hd//8) uint8 (store path)."""
+    return pack_kv_ref(kv, bits)
+
+
+def ladder_paged_attention(
+    q: jnp.ndarray,
+    k_planes: jnp.ndarray,
+    v_planes: jnp.ndarray,
+    ladder,
+    valid_len: int,
+    bits: int = 16,
+    bs: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q (B, 1, Hp, hd); ladder ((s0, s1, keep), ...) covering [0, S).
+
+    Returns (B, 1, Hp, hd) attention output in q.dtype.  HBM KV bytes =
+    Σ_rungs keep/16 · range bf16 bytes."""
+    b, one, hp, hd = q.shape
+    assert one == 1
+    hkv = k_planes.shape[3]
+    rep = hp // hkv
+    s_total = k_planes.shape[2]
+    mask_full = (jnp.arange(s_total) < valid_len).astype(jnp.int8)
+    mask_full = jnp.broadcast_to(mask_full, (b, s_total))
+    qg = q.reshape(b, hkv, rep, hd)
+
+    m_all, l_all, o_all = None, None, None
+    for (s0, s1, keep) in ladder:
+        o_r, m_r, l_r = K.paged_attention_rung(
+            qg,
+            k_planes[:, :, s0:s1],
+            v_planes[:, :, s0:s1],
+            mask_full[:, s0:s1],
+            keep=keep,
+            bits=bits,
+            bs=min(bs, s1 - s0),
+            interpret=interpret,
+        )
+        if m_all is None:
+            m_all, l_all, o_all = m_r, l_r, o_r
+        else:
+            m_new = jnp.maximum(m_all, m_r)
+            c_old = jnp.exp(m_all - m_new)
+            c_new = jnp.exp(m_r - m_new)
+            o_all = o_all * c_old[..., None] + o_r * c_new[..., None]
+            l_all = l_all * c_old + l_r * c_new
+            m_all = m_new
+    out = o_all / jnp.maximum(l_all, 1e-30)[..., None]
+    return out.reshape(b, 1, hp, hd).astype(q.dtype)
+
+
+def kv_fetch_bytes(k_planes: jnp.ndarray, ladder) -> int:
+    """HBM bytes both KV streams move for a ladder fetch."""
+    bits, b, s, hkv, hd8 = k_planes.shape
+    per_token_plane = hkv * hd8
+    total = 0
+    for (s0, s1, keep) in ladder:
+        total += keep * (s1 - s0) * per_token_plane
+    return 2 * b * total  # k and v

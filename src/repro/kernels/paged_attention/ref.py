@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for bit-plane paged decode attention.
+
+KV-plane layout: planes (bits, B, S, Hkv, hd//8) uint8 — bit i (0 = MSB) of
+K[b, s, h, d] at planes[i, b, s, h, d//8] bit (7 - d%8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def pack_kv_ref(kv: jnp.ndarray, bits: int = 16) -> jnp.ndarray:
+    """(B, S, Hkv, hd) bf16 -> (bits, B, S, Hkv, hd//8) uint8."""
+    u = jax.lax.bitcast_convert_type(kv.astype(jnp.bfloat16), jnp.uint16)
+    u = u.astype(jnp.uint32)
+    shifts = jnp.arange(bits - 1, -1, -1, dtype=jnp.uint32)
+    bm = (u[None] >> shifts[:, None, None, None, None]) & 1
+    g = bm.reshape(bm.shape[:-1] + (bm.shape[-1] // 8, 8))
+    byte_w = jnp.array([1 << (7 - i) for i in range(8)], jnp.uint32)
+    return (g * byte_w).sum(-1).astype(jnp.uint8)
+
+
+def unpack_kv_ref(planes: jnp.ndarray, keep: int, bits: int = 16) -> jnp.ndarray:
+    """planes -> (B, S, Hkv, hd) bf16, low planes zeroed (truncation)."""
+    shifts8 = jnp.arange(7, -1, -1, dtype=jnp.uint32)
+    bm = (planes[:keep].astype(jnp.uint32)[..., None] >> shifts8) & 1
+    bm = bm.reshape(bm.shape[:4] + (-1,))
+    plane_w = jnp.array([1 << (bits - 1 - i) for i in range(keep)], jnp.uint32)
+    u = (bm * plane_w[:, None, None, None, None]).sum(0).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+
+
+def ladder_attention_ref(q, k_planes, v_planes, ladder, valid_len, bits=16):
+    """q: (B, 1, Hp, hd); ladder: ((start_s, end_s, keep), ...) covering
+    [0, S).  Page ranges decode at their rung's precision; softmax runs over
+    the union.  Returns (B, 1, Hp, hd)."""
+    b, _, hp, hd = q.shape
+    s_total = k_planes.shape[2]
+    hkv = k_planes.shape[3]
+    rep = hp // hkv
+    k_parts, v_parts = [], []
+    for (s0, s1, keep) in ladder:
+        k_parts.append(unpack_kv_ref(k_planes[:, :, s0:s1], keep, bits))
+        v_parts.append(unpack_kv_ref(v_planes[:, :, s0:s1], keep, bits))
+    k = jnp.concatenate(k_parts, axis=1)
+    v = jnp.concatenate(v_parts, axis=1)
+    head_map = np.arange(hp) // rep
+    kh = k[:, :, head_map].astype(jnp.float32)
+    vh = v[:, :, head_map].astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kh) / np.sqrt(hd)
+    ok = jnp.arange(s_total) < valid_len
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vh)
+    return o.astype(q.dtype)

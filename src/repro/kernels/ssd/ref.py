@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the SSD kernel — delegates to the model's own
+``ssd_scan`` (chunked state-space-duality form, arXiv:2405.21060), which is
+itself pinned by a sequential-recurrence test in tests/test_models.py."""
+
+from __future__ import annotations
+
+from repro.models.ssm import ssd_scan
+
+
+def ssd_ref(xdt, da, b_h, c_h, h0=None, chunk=256):
+    """xdt (B, L, H, P) f32 (inputs pre-scaled by dt); da (B, L, H) f32
+    (per-position dt·A, negative); b_h/c_h (B, L, H, N) f32.
+
+    Returns (y (B, L, H, P) f32, h_final (B, H, N, P) f32)."""
+    return ssd_scan(xdt, da, b_h, c_h, h0=h0, chunk=chunk)

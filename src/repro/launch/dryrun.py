@@ -1,0 +1,270 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell against the production mesh and report memory / cost / collective
+analysis (EXPERIMENTS.md §Dry-run feeds §Roofline from this output).
+
+The two lines above MUST run before any other import: jax locks the device
+count at first init, and the dry-run needs 512 placeholder host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --json out.json
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ALL_SHAPES, ARCH_IDS, arch_shapes, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step  # noqa: E402
+from repro.models.model import build_model, input_specs  # noqa: E402
+from repro.optim.adamw import AdamWConfig, adamw_init  # noqa: E402
+from repro.runtime import sharding  # noqa: E402
+from repro.runtime.hlo_analysis import Roofline, analyse_hlo, cost_terms  # noqa: E402
+
+
+def _params_specs(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def model_flops_for_cell(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS = 6·N·D (training) / 2·N·D (inference fwd),
+    with N = active params (MoE counts routed-in experts only)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch
+
+
+def kernel_boundary_bytes(cfg, cell) -> float:
+    """Analytic HBM boundary traffic (GLOBAL bytes/step) of the VMEM-scoped
+    kernel regions (flash/decode attention, SSD): what the Pallas kernels
+    actually read+write per invocation.  The HLO analyzer discounts the
+    scoped interiors (they are VMEM-resident under the kernels); this term
+    adds the kernels' true traffic back (hlo_analysis.VMEM_SCOPES).
+
+    Train steps are charged 4× the forward boundary (forward + remat
+    recompute + backward reads q/k/v/o/do and writes dq/dk/dv)."""
+    b, s = cell.global_batch, cell.seq_len
+    hd, hp, hkv = cfg.head_dim, cfg.n_q_heads_padded, cfg.n_kv_heads
+    train_factor = 4.0 if cell.kind == "train" else 1.0
+
+    def attn_fwd(sq, skv, ctx_read=False):
+        q_b = b * sq * hp * hd * 2
+        kv_b = 2 * b * skv * hkv * hd * 2
+        return q_b * 2 + kv_b  # read q + write o + read k,v
+
+    def ssd_fwd(length):
+        h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        per_tok = h * (p + 2 * n + 1) * 4  # xdt, B, C, da (f32)
+        return b * length * per_tok + b * length * h * p * 4  # + write y
+
+    def ssd_step():
+        h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        return 2.0 * b * h * n * p * 4  # read+write state
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cell.kind in ("train", "prefill"):
+            return cfg.n_layers * attn_fwd(s, s) * train_factor
+        skv = min(cfg.attn_window, s) if cfg.attn_window > 0 else s
+        return cfg.n_layers * attn_fwd(1, skv)
+    if fam == "ssm":
+        if cell.kind in ("train", "prefill"):
+            return cfg.n_layers * ssd_fwd(s) * train_factor
+        return cfg.n_layers * ssd_step()
+    if fam == "hybrid":
+        from repro.models.hybrid import hybrid_counts
+
+        n_attn, seg_m, tail = hybrid_counts(cfg)
+        n_mamba = n_attn * seg_m + tail
+        if cell.kind in ("train", "prefill"):
+            return (n_attn * attn_fwd(s, s) + n_mamba * ssd_fwd(s)) * train_factor
+        return n_attn * attn_fwd(1, s) + n_mamba * ssd_step()
+    if fam == "encdec":
+        s_dec = max(1, s - cfg.enc_seq)
+        enc = cfg.n_enc_layers * attn_fwd(cfg.enc_seq, cfg.enc_seq)
+        if cell.kind in ("train", "prefill"):
+            dec = cfg.n_layers * (attn_fwd(s_dec, s_dec) + attn_fwd(s_dec, cfg.enc_seq))
+            return (enc + dec) * train_factor
+        dec = cfg.n_layers * (attn_fwd(1, s_dec) + attn_fwd(1, cfg.enc_seq))
+        return dec  # encoder not re-run at decode
+    raise ValueError(fam)
+
+
+def lower_cell(cfg, cell, mesh, n_micro: int = 1, shard_mode: str = "tp"):
+    """Build + lower + compile one (arch, shape, mesh) cell.
+
+    Returns (compiled, lowered) — caller extracts analyses."""
+    model = build_model(cfg)
+    specs = input_specs(cfg, cell)
+    pspecs = sharding.param_pspecs(cfg, _params_specs(model), mesh, mode=shard_mode)
+    p_sh = sharding.named(mesh, pspecs)
+    params_specs = _params_specs(model)
+
+    if cell.kind == "train":
+        opt_specs = jax.eval_shape(adamw_init, params_specs)
+        o_sh = sharding.named(
+            mesh, sharding.opt_pspecs(cfg, opt_specs, pspecs, mesh)
+        )
+        b_sh = sharding.named(
+            mesh, sharding.batch_pspecs(cfg, specs["batch"], mesh, mode=shard_mode)
+        )
+        step = make_train_step(model, AdamWConfig(), n_micro=n_micro)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),  # params/opt update in place
+        )
+        args = (params_specs, opt_specs, specs["batch"])
+    elif cell.kind == "prefill":
+        b_sh = sharding.named(mesh, sharding.batch_pspecs(cfg, specs["batch"], mesh))
+        step = make_prefill_step(model)
+        # Let XLA place the (freshly produced) prefill cache output.
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=None)
+        args = (params_specs, specs["batch"])
+    else:  # decode
+        c_sh = sharding.named(mesh, sharding.cache_pspecs(cfg, specs["cache"], mesh))
+        t_sh = sharding.named(mesh, sharding.batch_pspecs(cfg, specs["token"], mesh))
+        step = make_serve_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, t_sh, c_sh),
+            out_shardings=(t_sh, c_sh),
+            donate_argnums=(2,),  # KV cache updates in place
+        )
+        args = (params_specs, specs["token"], specs["cache"])
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, lowered
+
+
+def analyse_cell(arch, shape_name, multi_pod, n_micro=1, verbose=True,
+                 shard_mode="tp"):
+    cfg = get_config(arch)
+    cell = ALL_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    compiled, lowered = lower_cell(
+        cfg, cell, mesh, n_micro=n_micro, shard_mode=shard_mode
+    )
+    dt = time.time() - t0
+    ca_flops, ca_bytes = cost_terms(compiled)  # body-once cross-check
+    hlo = compiled.as_text()
+    cost = analyse_hlo(hlo)
+    mem = compiled.memory_analysis()
+    boundary_per_dev = kernel_boundary_bytes(cfg, cell) / n_dev
+    roof = Roofline(
+        name=f"{arch}/{shape_name}/{'multi' if multi_pod else 'single'}",
+        n_devices=n_dev,
+        hlo_flops=cost.flops,
+        hlo_bytes=cost.hbm_bytes + boundary_per_dev,
+        collective_link_bytes=cost.collective_link_bytes,
+        model_flops=model_flops_for_cell(cfg, cell),
+    )
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": n_dev,
+        "compile_s": dt,
+        "collectives": {k: [c, b] for k, (c, b) in cost.collectives_by_op.items()},
+        "cost_analysis_flops": ca_flops,
+        "cost_analysis_bytes": ca_bytes,
+        "vmem_discounted_gb": cost.vmem_discounted_bytes / 1e9,
+        "kernel_boundary_gb_per_dev": boundary_per_dev / 1e9,
+        **roof.row(),
+    }
+    if mem is not None:
+        for attr in (
+            "temp_size_in_bytes",
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+        # memory_analysis reports the PER-DEVICE SPMD module already
+        arg = out.get("argument_size_in_bytes", 0)
+        tmp = out.get("temp_size_in_bytes", 0)
+        out["bytes_per_device"] = arg + tmp
+    if verbose:
+        print(
+            f"[dryrun] {out['name']:44s} ok "
+            f"compile={dt:6.1f}s dev_flops={cost.flops / 1e12:9.3f}T "
+            f"dev_hbm={cost.hbm_bytes / 1e9:8.2f}GB "
+            f"dev_link={cost.collective_link_bytes / 1e6:9.1f}MB "
+            f"bound={roof.bottleneck} mfu_bound={roof.mfu_bound:.3f}"
+        )
+        print(cost.summary())
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=tuple(ALL_SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="every assigned cell")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--shard-mode", choices=("tp", "fsdp", "dp"), default="tp")
+    ap.add_argument("--json", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else (args.arch,)
+    for arch in archs:
+        cfg = get_config(arch)
+        for cell in arch_shapes(cfg):
+            if args.shape and cell.name != args.shape:
+                continue
+            cells.append((arch, cell.name))
+
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[args.mesh]
+    results, failures = [], []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            try:
+                res = analyse_cell(
+                    arch, shape_name, multi, args.n_micro,
+                    shard_mode=args.shard_mode,
+                )
+                res["shard_mode"] = args.shard_mode
+                results.append(res)
+                if args.json:
+                    with open(args.json, "a") as f:
+                        f.write(json.dumps(res) + "\n")
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape_name, multi, repr(e)))
+                print(f"[dryrun] FAIL {arch}/{shape_name}/{multi}: {e}")
+                traceback.print_exc()
+
+    print(f"\n[dryrun] {len(results)} cells compiled, {len(failures)} failures")
+    for f in failures:
+        print("  FAIL", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

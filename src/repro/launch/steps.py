@@ -1,0 +1,48 @@
+"""Step functions the launchers jit: train / prefill / serve.
+
+These are the exact callables the dry-run lowers against the production mesh
+and the drivers run on real hardware — one code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.grad_utils import accumulate_grads
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, n_micro: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = accumulate_grads(model.loss, params, batch, n_micro)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    """(params, batch) -> (last-token greedy token, cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """(params, token, cache) -> (next token, cache) — one decode step.
+
+    Greedy here; the serving engine composes this with the sampler."""
+
+    def serve_step(params, token, cache):
+        logits, cache = model.decode(params, token, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step

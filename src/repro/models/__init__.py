@@ -1,0 +1,8 @@
+"""Model substrate: all ten assigned architectures in pure functional JAX.
+
+Layer params are stacked along a leading depth axis and iterated with
+``jax.lax.scan`` so HLO size is O(1) in depth (critical for the 512-device
+dry-run of 60-81-layer configs).
+"""
+
+from repro.models.model import build_model, input_specs  # noqa: F401

@@ -1,0 +1,477 @@
+"""GQA attention with a flash-style chunked softmax (pure jnp).
+
+Design notes (DESIGN.md §3):
+
+* **GQA with awkward head counts.** q-heads may be padded to a multiple of
+  the TP degree (``cfg.pad_heads_to``); padded heads have zero ``wq`` rows
+  and are masked out before ``wo``, so the function is exactly the published
+  architecture while every sharded einsum stays balanced.  KV heads are
+  *replicated* across the model axis (standard practice when
+  n_kv_heads < TP), and each q head gathers its kv head via a static
+  ``head_map`` (clipped ``h // rep``), which is comm-free on replicated KV.
+
+* **Flash-style chunking.** Attention scans over KV chunks with an online
+  softmax in fp32, so the (Sq, Skv) score matrix never materialises — the
+  32 k-token prefill fits in VMEM-scale working sets.  This jnp version is
+  also the oracle for the Pallas kernel (kernels/flash_attention).
+
+* **One code path** for train (Sq == Skv, causal), prefill (same), decode
+  (Sq == 1 against a long cache with ``kv_valid`` masking), sliding-window
+  (Mixtral) and bidirectional (Whisper encoder / cross-attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, he_init, rope_angles
+
+NEG_INF = -1e30
+
+
+def head_map_static(n_q_heads_padded, n_heads, n_kv_heads):
+    """Static q-head -> kv-head mapping, *grouped* layout.
+
+    Padded q-heads are interleaved per kv group: q-head ``h`` serves kv head
+    ``h // rep_p`` where ``rep_p = Hp / Hkv``; within each group the first
+    ``n_heads/n_kv_heads`` slots are real heads and the rest are padding.
+    The grouped layout keeps each kv head's q-heads contiguous, so GQA decode
+    attention is a reshape (no head gather) and TP sharding of the q-head
+    axis never splits a kv group unevenly."""
+    hkv = max(1, n_kv_heads)
+    assert n_q_heads_padded % hkv == 0, (n_q_heads_padded, n_kv_heads)
+    rep_p = n_q_heads_padded // hkv
+    return jnp.asarray(np.arange(n_q_heads_padded) // rep_p, jnp.int32)
+
+
+def valid_q_heads(n_q_heads_padded, n_heads, n_kv_heads) -> np.ndarray:
+    """(Hp,) bool — which padded q-head slots are real heads."""
+    hkv = max(1, n_kv_heads)
+    rep_p = n_q_heads_padded // hkv
+    rep = max(1, n_heads) // hkv
+    return (np.arange(n_q_heads_padded) % rep_p) < rep
+
+
+def attn_params(key, cfg, dtype, d_model=None):
+    d = d_model or cfg.d_model
+    hp, hkv, hd = cfg.n_q_heads_padded, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    valid = jnp.asarray(valid_q_heads(hp, cfg.n_heads, hkv), dtype)
+    wq = he_init(ks[0], (d, hp, hd), dtype, fan_in=d) * valid[None, :, None]
+    wo = he_init(ks[3], (hp, hd, d), dtype, fan_in=hp * hd) * valid[:, None, None]
+    return {
+        "wq": wq,
+        "wk": he_init(ks[1], (d, hkv, hd), dtype, fan_in=d),
+        "wv": he_init(ks[2], (d, hkv, hd), dtype, fan_in=d),
+        "wo": wo,
+    }
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    head_map,
+    *,
+    q_pos,
+    kv_valid,
+    window=0,
+    bidirectional=False,
+    chunk=512,
+    kv_pos=None,
+):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hp, hd); k/v: (B, Skv, Hkv, hd); head_map: (Hp,) int32.
+    q_pos: (B, Sq) absolute positions of the queries.
+    kv_valid: scalar or (B,) — number of valid cache entries.
+    kv_pos: optional (B, Skv) absolute positions of the cache slots
+    (ring-buffer SWA caches); default is ``arange(Skv)``.  Negative
+    positions mark unfilled slots.
+
+    The body is wrapped in named_scope "flash_vmem": on TPU this region is
+    served by kernels/flash_attention (scores/softmax state stay in VMEM),
+    so the roofline analysis discounts its interior HBM traffic and charges
+    the kernel's boundary bytes instead (DESIGN.md §2, hlo_analysis).  A
+    custom VJP implements the standard flash backward — scores are
+    RECOMPUTED chunk-by-chunk from (q, k, v, o, lse); no per-chunk score
+    residual is ever saved (exactly the production flash-kernel contract).
+    """
+    return _flash(
+        q, k, v, head_map, q_pos, jnp.asarray(kv_valid), kv_pos,
+        window, bool(bidirectional), int(chunk),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _flash(q, k, v, head_map, q_pos, kv_valid, kv_pos, window, bidirectional, chunk):
+    with jax.named_scope("flash_vmem"):
+        out, _ = _flash_attention_body(
+            q, k, v, head_map, q_pos=q_pos, kv_valid=kv_valid,
+            window=window, bidirectional=bidirectional, chunk=chunk,
+            kv_pos=kv_pos,
+        )
+    return out
+
+
+def _flash_fwd(q, k, v, head_map, q_pos, kv_valid, kv_pos, window, bidirectional, chunk):
+    with jax.named_scope("flash_vmem"):
+        out, lse = _flash_attention_body(
+            q, k, v, head_map, q_pos=q_pos, kv_valid=kv_valid,
+            window=window, bidirectional=bidirectional, chunk=chunk,
+            kv_pos=kv_pos,
+        )
+    return out, (q, k, v, head_map, q_pos, kv_valid, out, lse)
+
+
+def _flash_bwd(window, bidirectional, chunk, res, dout):
+    """Flash backward: per-chunk score recomputation from the saved
+    log-sum-exp.  Residuals are O(B·S·H·hd) — never the score matrix."""
+    q, k, v, head_map, q_pos, kv_valid, out, lse = res
+    with jax.named_scope("flash_vmem"):
+        B, Sq, Hp, hd = q.shape
+        Skv = k.shape[1]
+        hkv = k.shape[2]
+        rep = Hp // hkv
+        ck = int(min(chunk, Skv))
+        pad = (-Skv) % ck
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+        n_chunks = (Skv + pad) // ck
+        kc = jnp.moveaxis(kp.reshape(B, n_chunks, ck, hkv, hd), 1, 0)
+        vc = jnp.moveaxis(vp.reshape(B, n_chunks, ck, hkv, hd), 1, 0)
+        scale = 1.0 / np.sqrt(hd)
+        if kv_valid.ndim == 0:
+            kv_valid = jnp.broadcast_to(kv_valid, (B,))
+        # delta_i = sum_d do_i o_i  (B, Hp, Sq)
+        delta = jnp.einsum(
+            "bqhd,bqhd->bhq", dout.astype(jnp.float32), out.astype(jnp.float32)
+        )
+
+        def body(dq_acc, xs):
+            k_i, v_i, c_i = xs
+            kpos = (c_i * ck + jnp.arange(ck))[None, None, None, :]
+            kh = k_i[:, :, head_map, :]
+            vh = v_i[:, :, head_map, :]
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", q, kh.astype(q.dtype),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            ok = (kpos >= 0) & (kpos < kv_valid[:, None, None, None])
+            if not bidirectional:
+                ok &= kpos <= q_pos[:, None, :, None]
+            if window > 0:
+                ok &= kpos > q_pos[:, None, :, None] - window
+            p = jnp.where(ok, jnp.exp(s - lse[..., None]), 0.0)  # (B,Hp,Sq,ck)
+            pb = p.astype(q.dtype)
+            # dv (per kv head): group-sum over the rep axis.
+            dvh = jnp.einsum(
+                "bhqk,bqhd->bkhd", pb, dout, preferred_element_type=jnp.float32
+            )  # (B, ck, Hp, hd)
+            dv_i = dvh.reshape(B, ck, hkv, rep, hd).sum(3)
+            dp = jnp.einsum(
+                "bqhd,bkhd->bhqk", dout, vh.astype(dout.dtype),
+                preferred_element_type=jnp.float32,
+            )
+            ds = p * (dp - delta[..., None]) * scale  # (B,Hp,Sq,ck) f32
+            dsb = ds.astype(q.dtype)
+            dq_acc = dq_acc + jnp.einsum(
+                "bhqk,bkhd->bqhd", dsb, kh.astype(q.dtype),
+                preferred_element_type=jnp.float32,
+            )
+            dkh = jnp.einsum(
+                "bhqk,bqhd->bkhd", dsb, q, preferred_element_type=jnp.float32
+            )
+            dk_i = dkh.reshape(B, ck, hkv, rep, hd).sum(3)
+            return dq_acc, (dk_i, dv_i)
+
+        dq0 = jnp.zeros((B, Sq, Hp, hd), jnp.float32)
+        dq, (dk_c, dv_c) = jax.lax.scan(
+            body, dq0, (kc, vc, jnp.arange(n_chunks))
+        )
+        dk = jnp.moveaxis(dk_c, 0, 1).reshape(B, Skv + pad, hkv, hd)[:, :Skv]
+        dv = jnp.moveaxis(dv_c, 0, 1).reshape(B, Skv + pad, hkv, hd)[:, :Skv]
+    return (
+        dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+        None, None, None, None,
+    )
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _flash_attention_body(
+    q, k, v, head_map, *, q_pos, kv_valid, window, bidirectional, chunk, kv_pos
+):
+    """Returns (out (B,Sq,Hp,hd), lse (B,Hp,Sq) fp32)."""
+    B, Sq, Hp, hd = q.shape
+    Skv = k.shape[1]
+    chunk = int(min(chunk, Skv))
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_pos is not None:
+            kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (Skv + pad) // chunk
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, *k.shape[2:]), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, *v.shape[2:]), 1, 0)
+    if kv_pos is not None:
+        kpc = jnp.moveaxis(kv_pos.reshape(B, n_chunks, chunk), 1, 0)
+    scale = 1.0 / np.sqrt(hd)
+    kv_valid = jnp.asarray(kv_valid)
+    if kv_valid.ndim == 0:
+        kv_valid = jnp.broadcast_to(kv_valid, (B,))
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if kv_pos is not None:
+            k_i, v_i, c_i, kp_i = xs
+            kpos = kp_i[:, None, None, :]  # (B,1,1,chunk)
+        else:
+            k_i, v_i, c_i = xs
+            kpos = (c_i * chunk + jnp.arange(chunk))[None, None, None, :]
+        kh = k_i[:, :, head_map, :]  # (B, chunk, Hp, hd)
+        vh = v_i[:, :, head_map, :]
+        # bf16 operands, fp32 MXU accumulation — no f32 copies of q/k/v.
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, kh.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        ok = (kpos >= 0) & (kpos < kv_valid[:, None, None, None])
+        if not bidirectional:
+            ok &= kpos <= q_pos[:, None, :, None]
+        if window > 0:
+            ok &= kpos > q_pos[:, None, :, None] - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vh.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hp, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hp, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hp, Sq, hd), jnp.float32)
+    xs = (kc, vc, jnp.arange(n_chunks))
+    if kv_pos is not None:
+        xs = xs + (kpc,)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype), lse  # (B, Sq, Hp, hd)
+
+
+def merge_attention_partials(parts):
+    """Combine online-softmax partials [(o_unnorm, m, l), ...] -> output.
+
+    o_unnorm: (B, 1, Hp, hd) f32 = acc (pre-normalisation); m/l (B,Hp)."""
+    o_all, m_all, l_all = parts[0]
+    for o, m, l in parts[1:]:
+        m_new = jnp.maximum(m_all, m)
+        c_old = jnp.exp(m_all - m_new)
+        c_new = jnp.exp(m - m_new)
+        o_all = o_all * c_old[:, None, :, None] + o * c_new[:, None, :, None]
+        l_all = l_all * c_old + l * c_new
+        m_all = m_new
+    return o_all / jnp.maximum(l_all, 1e-30)[:, None, :, None]
+
+
+def decode_attention(
+    q,
+    k,
+    v,
+    *,
+    q_pos,
+    kv_valid,
+    window=0,
+    bidirectional=False,
+    kv_pos=None,
+    return_partials=False,
+):
+    """Single-token (Sq == 1) attention, GSPMD-native.
+
+    Unlike :func:`flash_attention`, there is no chunk scan and the GQA
+    expansion is a *reshape of q* (grouped head layout), never a gather that
+    materialises per-q-head KV.  Scores (B, Hkv, rep, Skv) are fp32 and
+    reductions run over the (possibly sharded) Skv axis, so a KV cache
+    sharded over sequence works under plain jit: XLA inserts one
+    all-reduce(max), one all-reduce(sum) and one all-reduce for the output —
+    the context-parallel decode pattern (DESIGN.md §6).
+
+    q: (B, 1, Hp, hd); k/v: (B, Skv, Hkv, hd).
+
+    named_scope "decode_attn_vmem": on TPU this region is served by
+    kernels/paged_attention (bit-plane KV fetch, VMEM-resident scores); the
+    roofline discounts interior traffic and charges q + KV + o boundary
+    bytes instead.
+    """
+    with jax.named_scope("decode_attn_vmem"):
+        return _decode_attention_body(
+            q, k, v, q_pos=q_pos, kv_valid=kv_valid, window=window,
+            bidirectional=bidirectional, kv_pos=kv_pos,
+            return_partials=return_partials,
+        )
+
+
+def _decode_attention_body(
+    q, k, v, *, q_pos, kv_valid, window, bidirectional, kv_pos,
+    return_partials=False,
+):
+    b, sq, hp, hd = q.shape
+    assert sq == 1
+    hkv = k.shape[2]
+    rep = hp // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.reshape(b, hkv, rep, hd)  # bf16 stays bf16; MXU accumulates fp32
+    s = jnp.einsum(
+        "bkrd,bskd->bkrs", qf, k.astype(qf.dtype),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (B, Hkv, rep, Skv)
+    skv = k.shape[1]
+    kpos = kv_pos if kv_pos is not None else jnp.arange(skv, dtype=jnp.int32)[None]
+    kv_valid = jnp.asarray(kv_valid)
+    if kv_valid.ndim == 0:
+        kv_valid = jnp.broadcast_to(kv_valid, (b,))
+    ok = (kpos >= 0) & (kpos < kv_valid[:, None])
+    if not bidirectional:
+        ok &= kpos <= q_pos[:, :1]
+    if window > 0:
+        ok &= kpos > q_pos[:, :1] - window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum(
+        "bkrs,bskd->bkrd", p.astype(qf.dtype), v.astype(qf.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    if return_partials:
+        return (
+            acc.reshape(b, 1, hp, hd),
+            m.reshape(b, hp),
+            l.reshape(b, hp),
+        )
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(b, 1, hp, hd).astype(q.dtype)
+
+
+def attn_apply(
+    params,
+    x,
+    cfg,
+    *,
+    pos,
+    cache=None,
+    cache_len=None,
+    kv_input=None,
+    use_rope=True,
+    bidirectional=False,
+    window=None,
+):
+    """One attention sub-layer.
+
+    x: (B, S, d).  pos: (B, S) absolute positions.
+    cache: optional (k, v) or (k, v, kv_pos), each k/v (B, S_cache, Hkv, hd) —
+    decode/prefill-append.  The 3-tuple form is a *ring buffer* (sliding-window
+    archs: S_cache == window): new tokens land at slot ``pos % S_cache`` and
+    ``kv_pos`` (B, S_cache) records absolute positions (-1 = unfilled).
+    cache_len: scalar int32, valid entries already in the cache.
+    kv_input: cross-attention source (B, S_kv, d) — projects k/v from it and
+    ignores the cache-append path when paired with precomputed caches.
+    Returns (y, new_cache) — with cache=None, new_cache is the freshly
+    projected (k, v) pair (post-rope), which prefill uses to build the cache.
+    """
+    window = cfg.attn_window if window is None else window
+    hp = params["wq"].shape[1]
+    hm = head_map_static(hp, cfg.n_heads, cfg.n_kv_heads)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    src = x if kv_input is None else kv_input
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if use_rope:
+        cos_q, sin_q = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos_q, sin_q)
+        if kv_input is None:
+            k = apply_rope(k, cos_q, sin_q)
+
+    if cache is None:
+        kv_valid = pos[:, -1] + 1 if not bidirectional else k.shape[1]
+        out = flash_attention(
+            q, k, v, hm, q_pos=pos, kv_valid=kv_valid,
+            window=window, bidirectional=bidirectional,
+        )
+        new_cache = (k, v)
+    elif len(cache) == 4:
+        # Staged decode cache (§Perf Cell-3): the big cache (ck, cv) is
+        # READ-ONLY this step — the new token lands in a small staging ring
+        # (sk, sv), and a separate amortised flush folds staging into the
+        # main cache every `ws` steps.  Eliminates the per-step masked
+        # rewrite of the full sequence-sharded cache shard.
+        ck, cv, sk, sv = cache
+        ws = sk.shape[1]
+        staged_n = cache_len % ws
+        sk = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, staged_n, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, staged_n, 0, 0))
+        big_valid = cache_len - staged_n
+        stage_pos = big_valid + jnp.arange(ws, dtype=jnp.int32)[None]
+        parts = [
+            decode_attention(
+                q, ck, cv, q_pos=pos, kv_valid=big_valid,
+                window=window, bidirectional=bidirectional,
+                return_partials=True,
+            ),
+            decode_attention(
+                q, sk, sv, q_pos=pos, kv_valid=cache_len + x.shape[1],
+                window=window, bidirectional=bidirectional,
+                kv_pos=stage_pos, return_partials=True,
+            ),
+        ]
+        out = merge_attention_partials(parts).astype(q.dtype)
+        new_cache = (ck, cv, sk, sv)
+    elif len(cache) == 3:
+        # Ring-buffer append (S == 1 decode steps only).
+        ck, cv, cpos = cache
+        w = ck.shape[1]
+        slot = cache_len % w
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(cache_len, (cpos.shape[0], 1)).astype(cpos.dtype),
+            (0, slot),
+        )
+        out = decode_attention(
+            q, ck, cv, q_pos=pos, kv_valid=cache_len + x.shape[1],
+            window=window, bidirectional=bidirectional, kv_pos=cpos,
+        )
+        new_cache = (ck, cv, cpos)
+    else:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+        kv_valid = cache_len + x.shape[1]
+        if x.shape[1] == 1:
+            out = decode_attention(
+                q, ck, cv, q_pos=pos, kv_valid=kv_valid,
+                window=window, bidirectional=bidirectional,
+            )
+        else:
+            out = flash_attention(
+                q, ck, cv, hm, q_pos=pos, kv_valid=kv_valid,
+                window=window, bidirectional=bidirectional,
+            )
+        new_cache = (ck, cv)
+
+    if hp != cfg.n_heads:  # mask padded heads (exactness + zero grads)
+        valid = jnp.asarray(valid_q_heads(hp, cfg.n_heads, cfg.n_kv_heads), out.dtype)
+        out = out * valid[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache

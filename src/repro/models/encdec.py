@@ -1,0 +1,241 @@
+"""Encoder-decoder LM (Whisper family).
+
+The conv audio frontend is a STUB (``frontends.audio_frame_spec``): the
+encoder consumes precomputed frame embeddings at ``d_model``.  Positions are
+sinusoidal (Whisper uses learned decoder positions; sinusoidal keeps every
+shape cell well-defined — DESIGN.md §8).
+
+Cache layout (decode): per decoder layer a self-attn KV cache plus a
+*cross*-attn KV cache projected once from the encoder output at prefill.
+The cross KV is static per request — exactly the "clusters extremely well"
+case called out in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attn_params,
+    decode_attention,
+    flash_attention,
+    head_map_static,
+    valid_q_heads,
+)
+from repro.models.layers import (
+    embed_apply,
+    embed_params,
+    lm_head_params,
+    mlp_apply,
+    mlp_params,
+    pdtype,
+    rmsnorm,
+    rmsnorm_params,
+    sinusoidal_positions,
+)
+
+
+def init_encdec_params(cfg, key):
+    dtype = pdtype(cfg)
+    k_embed, k_enc, k_dec, k_head = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": rmsnorm_params(cfg.d_model, dtype),
+            "attn": attn_params(k1, cfg, dtype),
+            "ln2": rmsnorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": rmsnorm_params(cfg.d_model, dtype),
+            "self_attn": attn_params(k1, cfg, dtype),
+            "ln2": rmsnorm_params(cfg.d_model, dtype),
+            "cross_attn": attn_params(k2, cfg, dtype),
+            "ln3": rmsnorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        }
+
+    params = {
+        "embed": embed_params(k_embed, cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(k_enc, cfg.n_enc_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(k_dec, cfg.n_layers)),
+        "enc_final": rmsnorm_params(cfg.d_model, dtype),
+        "dec_final": rmsnorm_params(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_params(k_head, cfg.vocab_padded, cfg.d_model, dtype)
+    return params
+
+
+def _head_w(params):
+    return params.get("lm_head", {"w": params["embed"]["table"]})["w"]
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, d) -> (B, S_enc, d)."""
+    b, s, d = frames.shape
+    x = frames.astype(pdtype(cfg)) + sinusoidal_positions(s, d).astype(pdtype(cfg))[None]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = _attn(lp["attn"], h, h, cfg, q_pos=pos, bidirectional=True)
+        x = x + a
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp_apply(lp["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_final"], cfg.norm_eps)
+
+
+def _attn(p, xq, xkv, cfg, *, q_pos, bidirectional, kv=None, kv_valid=None,
+          cache=None, cache_len=None):
+    """Shared projection+flash wrapper.  If ``kv`` is given it is a
+    precomputed (k, v) pair (cross-attn decode path); if ``cache`` is given
+    it is an append-mode self-attn cache (k, v)."""
+    hp = p["wq"].shape[1]
+    hm = head_map_static(hp, cfg.n_heads, cfg.n_kv_heads)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    if kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    else:
+        k, v = kv
+    new_cache = (k, v)
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+        kv_valid = cache_len + xq.shape[1]
+    if kv_valid is None:
+        kv_valid = k.shape[1] if bidirectional else q_pos[:, -1] + 1
+    if xq.shape[1] == 1:
+        out = decode_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                               bidirectional=bidirectional)
+    else:
+        out = flash_attention(q, k, v, hm, q_pos=q_pos, kv_valid=kv_valid,
+                              bidirectional=bidirectional)
+    if hp != cfg.n_heads:
+        valid = jnp.asarray(valid_q_heads(hp, cfg.n_heads, cfg.n_kv_heads), out.dtype)
+        out = out * valid[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _dec_stack(params, cfg, x, pos, enc_out, cache=None, want_cache=False):
+    """Decoder over (B, S, d).  cache: {'self_k','self_v','cross_k','cross_v'}
+    stacked (L, ...).  Returns (x, new_cache|None)."""
+    cache_len = cache["len"] if cache is not None else jnp.int32(0)
+
+    def body(x, xs):
+        if cache is not None:
+            lp, sk, sv, ck_, cv_ = xs
+        else:
+            lp = xs
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, self_kv = _attn(
+            lp["self_attn"], h, h, cfg, q_pos=pos, bidirectional=False,
+            cache=(sk, sv) if cache is not None else None, cache_len=cache_len,
+        )
+        x = x + a
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cache is not None:
+            c, cross_kv = _attn(
+                lp["cross_attn"], h, None, cfg, q_pos=pos, bidirectional=True,
+                kv=(ck_, cv_), kv_valid=ck_.shape[1],
+            )
+        else:
+            c, cross_kv = _attn(
+                lp["cross_attn"], h, enc_out, cfg, q_pos=pos, bidirectional=True,
+            )
+        x = x + c
+        h = rmsnorm(x, lp["ln3"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.act)
+        ys = (self_kv + cross_kv) if (want_cache or cache is not None) else None
+        return x, ys
+
+    xs = (
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"])
+        if cache is not None
+        else params["dec_layers"]
+    )
+    x, kv_stack = jax.lax.scan(body, x, xs)
+    new_cache = None
+    if kv_stack is not None:
+        sk, sv, ck, cv = kv_stack
+        new_cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+    return x, new_cache
+
+
+def encdec_loss(params, cfg, batch):
+    """batch: frames (B, S_enc, d), tokens (B, S_dec), labels (B, S_dec)."""
+    from repro.models.transformer import chunked_ce
+
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _dec_stack(params, cfg, x, pos, enc_out)
+    x = rmsnorm(x, params["dec_final"], cfg.norm_eps)
+    return chunked_ce(x, _head_w(params), batch["labels"], cfg.vocab)
+
+
+def encdec_prefill(params, cfg, batch):
+    """Returns (last-token logits (B, Vpad), cache)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = _dec_stack(params, cfg, x, pos, enc_out, want_cache=True)
+    x = rmsnorm(x[:, -1:], params["dec_final"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_w(params))[:, 0]
+    cache["len"] = jnp.int32(s)
+    return logits.astype(jnp.float32), cache
+
+
+def encdec_decode(params, cfg, token, cache):
+    """token: (B,); cache from prefill/init. Returns (logits, cache)."""
+    x = embed_apply(params["embed"], token[:, None])
+    b = x.shape[0]
+    offs = cache["len"]
+    # One-position sinusoid at the current offset.
+    d = cfg.d_model
+    half = d // 2
+    inv = jnp.exp(
+        -jnp.arange(half, dtype=jnp.float32)
+        * (jnp.log(10000.0) / max(1, half - 1))
+    )
+    ang = offs.astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+    x = x + pe.astype(x.dtype)[None, None, :]
+    pos = jnp.broadcast_to(offs, (b, 1)).astype(jnp.int32)
+    x, new_cache = _dec_stack(params, cfg, x, pos, None, cache=cache)
+    x = rmsnorm(x, params["dec_final"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_w(params))[:, 0]
+    new_cache["len"] = cache["len"] + 1
+    return logits.astype(jnp.float32), new_cache
+
+
+def init_encdec_cache(cfg, batch, max_len, dtype=None):
+    dtype = dtype or pdtype(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    dec = (cfg.n_layers, batch, max_len, hkv, hd)
+    cross = (cfg.n_layers, batch, cfg.enc_seq, hkv, hd)
+    return {
+        "self_k": jnp.zeros(dec, dtype),
+        "self_v": jnp.zeros(dec, dtype),
+        "cross_k": jnp.zeros(cross, dtype),
+        "cross_v": jnp.zeros(cross, dtype),
+        "len": jnp.int32(0),
+    }

@@ -1,0 +1,39 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[vlm]``/``[audio]`` architectures specify the transformer BACKBONE only;
+``input_specs()`` provides precomputed patch/frame embeddings instead of
+running a vision tower / mel-conv stack.  The backbone's projection of those
+embeddings (``patch_proj`` for LLaVA, identity for Whisper frames already at
+``d_model``) *is* part of the model and is exercised by tests and the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: stubbed vision-tower output width (CLIP-L/14-class towers emit 1024).
+VISION_DIM = 1024
+
+
+def vision_patch_spec(cfg, batch: int) -> jax.ShapeDtypeStruct:
+    """Precomputed patch embeddings for the VLM family (anyres tiling)."""
+    return jax.ShapeDtypeStruct((batch, cfg.n_patches, VISION_DIM), jnp.bfloat16)
+
+
+def audio_frame_spec(cfg, batch: int) -> jax.ShapeDtypeStruct:
+    """Precomputed post-conv frame embeddings for the enc-dec family.
+
+    Whisper's conv frontend maps 30 s of 80-mel audio to 1500 frames at
+    ``d_model``; the stub hands the encoder those 1500 frames directly.
+    """
+    return jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+
+
+def fake_patches(key, cfg, batch: int) -> jnp.ndarray:
+    """Runnable stand-in for tests/examples (unit-scale activations)."""
+    return jax.random.normal(key, (batch, cfg.n_patches, VISION_DIM), jnp.bfloat16)
+
+
+def fake_frames(key, cfg, batch: int) -> jnp.ndarray:
+    return jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)

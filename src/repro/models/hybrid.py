@@ -1,0 +1,339 @@
+"""SSM LM (Mamba2 family) and hybrid Mamba2+shared-attention LM (Zamba2).
+
+Zamba2 structure: ``n_layers`` slots; every ``attn_period``-th slot is a
+single SHARED transformer block (one parameter set, invoked ``n_attn`` times),
+the remaining slots are Mamba2 blocks.  Params are stacked so the whole depth
+is two nested ``lax.scan``s: an outer scan over ``n_attn`` segments, each
+(period-1) Mamba layers + one shared-attn invocation, plus a tail scan over
+the leftover Mamba layers (DESIGN.md §8 notes the per-invocation-LoRA
+simplification).
+
+Decode caches: stacked Mamba states (O(1) in context length — why the SSM and
+hybrid archs run the ``long_500k`` cell) plus one KV cache *per shared-attn
+invocation* (n_attn, B, S, H, hd).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_params
+from repro.models.layers import (
+    embed_apply,
+    embed_params,
+    lm_head_params,
+    mlp_apply,
+    mlp_params,
+    pdtype,
+    rmsnorm,
+    rmsnorm_params,
+)
+from repro.models.ssm import (
+    ssm_apply,
+    ssm_decode_step,
+    ssm_init_cache,
+    ssm_params,
+)
+from repro.models.transformer import chunked_ce
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _mamba_layer_params(key, cfg, dtype):
+    return {
+        "ln": rmsnorm_params(cfg.d_model, dtype),
+        "ssm": ssm_params(key, cfg, dtype),
+    }
+
+
+def _mamba_layer_seq(lp, x, cfg, initial=None):
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    y, cache = ssm_apply(lp["ssm"], h, cfg, initial=initial)
+    return x + y, cache
+
+
+def _mamba_layer_step(lp, x_t, cache, cfg):
+    h = rmsnorm(x_t[:, None, :], lp["ln"], cfg.norm_eps)[:, 0]
+    y, new_cache = ssm_decode_step(lp["ssm"], h, cache, cfg)
+    return x_t + y, new_cache
+
+
+def _head_w(params):
+    return params.get("lm_head", {"w": params["embed"]["table"]})["w"]
+
+
+def hybrid_counts(cfg):
+    """(n_attn segments, mamba-per-segment, tail mamba layers)."""
+    p = cfg.attn_period
+    n_attn = cfg.n_layers // p
+    return n_attn, p - 1, cfg.n_layers - n_attn * p
+
+
+# ---------------------------------------------------------------------------
+# SSM-only LM (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_lm_params(cfg, key):
+    dtype = pdtype(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: _mamba_layer_params(k, cfg, dtype))(
+        jax.random.split(k_layers, cfg.n_layers)
+    )
+    params = {
+        "embed": embed_params(k_embed, cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": rmsnorm_params(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_params(k_head, cfg.vocab_padded, cfg.d_model, dtype)
+    return params
+
+
+def _ssm_stack_seq(params, cfg, x, cache=None, want_cache=False, remat=None):
+    remat = cfg.remat if remat is None else remat
+
+    def body(x, xs):
+        if cache is not None:
+            lp, layer_cache = xs
+        else:
+            lp, layer_cache = xs, None
+        x, new_cache = _mamba_layer_seq(lp, x, cfg, initial=layer_cache)
+        ys = new_cache if (want_cache or cache is not None) else None
+        return x, ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (params["layers"], cache["layers"]) if cache is not None else params["layers"]
+    return jax.lax.scan(body, x, xs)
+
+
+def ssm_lm_loss(params, cfg, batch):
+    x = embed_apply(params["embed"], batch["tokens"])
+    x, _ = _ssm_stack_seq(params, cfg, x)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return chunked_ce(x, _head_w(params), batch["labels"], cfg.vocab)
+
+
+def ssm_lm_prefill(params, cfg, batch):
+    x = embed_apply(params["embed"], batch["tokens"])
+    x, layer_caches = _ssm_stack_seq(params, cfg, x, want_cache=True, remat=False)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_w(params))[:, 0]
+    cache = {"layers": layer_caches, "len": jnp.int32(batch["tokens"].shape[1])}
+    return logits.astype(jnp.float32), cache
+
+
+def ssm_lm_decode(params, cfg, token, cache):
+    x = embed_apply(params["embed"], token[:, None])[:, 0]
+
+    def body(x_t, xs):
+        lp, layer_cache = xs
+        x_t, new_cache = _mamba_layer_step(lp, x_t, layer_cache, cfg)
+        return x_t, new_cache
+
+    x, new_layer_caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = rmsnorm(x[:, None, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_w(params))[:, 0]
+    return logits.astype(jnp.float32), {
+        "layers": new_layer_caches,
+        "len": cache["len"] + 1,
+    }
+
+
+def init_ssm_lm_cache(cfg, batch, max_len=None, dtype=None):
+    dtype = dtype or pdtype(cfg)
+    one = ssm_init_cache(cfg, batch, dtype)
+    return {
+        "layers": jax.tree.map(
+            lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one
+        ),
+        "len": jnp.int32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid LM (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid_params(cfg, key):
+    dtype = pdtype(cfg)
+    n_attn, seg_m, tail = hybrid_counts(cfg)
+    k_embed, k_seg, k_tail, k_attn, k_mlp, k_head = jax.random.split(key, 6)
+
+    seg_keys = jax.random.split(k_seg, max(1, n_attn * seg_m)).reshape(n_attn, seg_m, 2)
+    seg_layers = jax.vmap(jax.vmap(lambda k: _mamba_layer_params(k, cfg, dtype)))(
+        seg_keys
+    )
+    tail_layers = jax.vmap(lambda k: _mamba_layer_params(k, cfg, dtype))(
+        jax.random.split(k_tail, max(1, tail))
+    )
+    if tail == 0:  # keep an empty leading axis so the tail scan is a no-op
+        tail_layers = jax.tree.map(lambda t: t[:0], tail_layers)
+    params = {
+        "embed": embed_params(k_embed, cfg.vocab_padded, cfg.d_model, dtype),
+        "seg_layers": seg_layers,  # (n_attn, seg_m, ...)
+        "tail_layers": tail_layers,  # (tail, ...)
+        "shared": {
+            "ln1": rmsnorm_params(cfg.d_model, dtype),
+            "attn": attn_params(k_attn, cfg, dtype),
+            "ln2": rmsnorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k_mlp, cfg.d_model, cfg.d_ff, "swiglu", dtype),
+        },
+        "final_norm": rmsnorm_params(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_params(k_head, cfg.vocab_padded, cfg.d_model, dtype)
+    return params
+
+
+def _shared_block_seq(sp, x, cfg, pos, kv_cache, cache_len):
+    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    a, new_kv = attn_apply(sp["attn"], h, cfg, pos=pos, cache=kv_cache, cache_len=cache_len)
+    x = x + a
+    h = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    return x + mlp_apply(sp["mlp"], h, "swiglu"), new_kv
+
+
+def _hybrid_seq(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
+    """Full-sequence hybrid stack. Returns (x, new_cache|None)."""
+    remat = cfg.remat if remat is None else remat
+    cache_len = cache["len"] if cache is not None else jnp.int32(0)
+    emit = want_cache or cache is not None
+
+    def seg_body(x, xs):
+        if cache is not None:
+            seg_lp, seg_cache, ck, cv = xs
+        else:
+            seg_lp, seg_cache, ck, cv = xs, None, None, None
+
+        def mamba_body(x, ys):
+            if seg_cache is not None:
+                lp, lc = ys
+            else:
+                lp, lc = ys, None
+            x, new_c = _mamba_layer_seq(lp, x, cfg, initial=lc)
+            return x, (new_c if emit else None)
+
+        inner_xs = (seg_lp, seg_cache) if seg_cache is not None else seg_lp
+        x, seg_caches = jax.lax.scan(mamba_body, x, inner_xs)
+        kv = (ck, cv) if cache is not None else None
+        x, new_kv = _shared_block_seq(params["shared"], x, cfg, pos, kv, cache_len)
+        ys = (seg_caches, new_kv) if emit else None
+        return x, ys
+
+    if remat:
+        seg_body = jax.checkpoint(seg_body, prevent_cse=False)
+
+    if cache is not None:
+        xs = (params["seg_layers"], cache["seg_ssm"], cache["k"], cache["v"])
+    else:
+        xs = params["seg_layers"]
+    x, seg_ys = jax.lax.scan(seg_body, x, xs)
+
+    def tail_body(x, ys):
+        if cache is not None:
+            lp, lc = ys
+        else:
+            lp, lc = ys, None
+        x, new_c = _mamba_layer_seq(lp, x, cfg, initial=lc)
+        return x, (new_c if emit else None)
+
+    tail_xs = (
+        (params["tail_layers"], cache["tail_ssm"]) if cache is not None
+        else params["tail_layers"]
+    )
+    x, tail_ys = jax.lax.scan(tail_body, x, tail_xs)
+
+    new_cache = None
+    if emit:
+        seg_caches, kv = seg_ys
+        ks, vs = kv
+        new_cache = {"seg_ssm": seg_caches, "tail_ssm": tail_ys, "k": ks, "v": vs}
+    return x, new_cache
+
+
+def hybrid_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _hybrid_seq(params, cfg, x, pos)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return chunked_ce(x, _head_w(params), batch["labels"], cfg.vocab)
+
+
+def hybrid_prefill(params, cfg, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = _hybrid_seq(params, cfg, x, pos, want_cache=True, remat=False)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_w(params))[:, 0]
+    cache["len"] = jnp.int32(s)
+    return logits.astype(jnp.float32), cache
+
+
+def hybrid_decode(params, cfg, token, cache):
+    x = embed_apply(params["embed"], token[:, None])
+    b = x.shape[0]
+    pos = jnp.broadcast_to(cache["len"], (b, 1)).astype(jnp.int32)
+    cache_len = cache["len"]
+
+    def seg_body(x, xs):
+        seg_lp, seg_cache, ck, cv = xs
+
+        def mamba_body(x1, ys):
+            lp, lc = ys
+            x1, new_c = _mamba_layer_step(lp, x1[:, 0, :], lc, cfg)
+            return x1[:, None, :], new_c
+
+        x, seg_caches = jax.lax.scan(mamba_body, x, (seg_lp, seg_cache))
+        x, new_kv = _shared_block_seq(params["shared"], x, cfg, pos, (ck, cv), cache_len)
+        return x, (seg_caches, new_kv)
+
+    x, (seg_caches, kv) = jax.lax.scan(
+        seg_body, x, (params["seg_layers"], cache["seg_ssm"], cache["k"], cache["v"])
+    )
+
+    def tail_body(x1, ys):
+        lp, lc = ys
+        x1, new_c = _mamba_layer_step(lp, x1[:, 0, :], lc, cfg)
+        return x1[:, None, :], new_c
+
+    x, tail_caches = jax.lax.scan(tail_body, x, (params["tail_layers"], cache["tail_ssm"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _head_w(params))[:, 0]
+    ks, vs = kv
+    new_cache = {
+        "seg_ssm": seg_caches,
+        "tail_ssm": tail_caches,
+        "k": ks,
+        "v": vs,
+        "len": cache["len"] + 1,
+    }
+    return logits.astype(jnp.float32), new_cache
+
+
+def init_hybrid_cache(cfg, batch, max_len, dtype=None):
+    dtype = dtype or pdtype(cfg)
+    n_attn, seg_m, tail = hybrid_counts(cfg)
+    one = ssm_init_cache(cfg, batch, dtype)
+    seg_ssm = jax.tree.map(
+        lambda t: jnp.zeros((n_attn, seg_m) + t.shape, t.dtype), one
+    )
+    tail_ssm = jax.tree.map(lambda t: jnp.zeros((tail,) + t.shape, t.dtype), one)
+    kv_shape = (n_attn, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "seg_ssm": seg_ssm,
+        "tail_ssm": tail_ssm,
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "len": jnp.int32(0),
+    }

@@ -1,0 +1,160 @@
+"""Shared primitives: norms, rotary embeddings, MLPs, embeddings.
+
+Pure functions over param dicts.  Norm/softmax accumulations run in fp32
+regardless of the storage dtype (bf16 by default), matching production
+practice on MXU hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (llama-style) and gated RMSNorm (mamba2 output norm)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x, params, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rmsnorm(x, z, params, eps=1e-5):
+    """Mamba2's norm: RMSNorm(x * silu(z)) — gate applied pre-normalisation."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions: (...,) int32 -> cos/sin (..., head_dim//2) fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, hd); cos/sin: (..., S, hd//2) broadcast over H."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # add head axis
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, d_model, offset=0):
+    """Whisper-style fixed sinusoidal embeddings, (seq_len, d_model) fp32."""
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (np.log(10000.0) / max(1, half - 1)))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": he_init(ks[0], (d, d_ff), dtype),
+            "w_in": he_init(ks[1], (d, d_ff), dtype),
+            "w_out": he_init(ks[2], (d_ff, d), dtype, fan_in=d_ff),
+        }
+    return {
+        "w_in": he_init(ks[0], (d, d_ff), dtype),
+        "w_out": he_init(ks[1], (d_ff, d), dtype, fan_in=d_ff),
+    }
+
+
+def mlp_apply(params, x, act):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+    elif act == "relu2":  # nemotron: squared ReLU, non-gated
+        h = jnp.square(jax.nn.relu(x @ params["w_in"]))
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["w_in"])
+    else:
+        raise ValueError(act)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_params(key, vocab_padded, d, dtype):
+    return {"table": he_init(key, (vocab_padded, d), dtype, fan_in=d)}
+
+
+def embed_apply(params, tokens):
+    return params["table"][tokens]
+
+
+def lm_head_params(key, vocab_padded, d, dtype):
+    return {"w": he_init(key, (vocab_padded, d), dtype)}
+
+
+def logits_apply(head, x, vocab_real):
+    """x: (..., d) -> (..., vocab_padded) with pad entries masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, head["w"]).astype(jnp.float32)
+    vpad = head["w"].shape[0]
+    if vpad != vocab_real:
+        mask = jnp.arange(vpad) < vocab_real
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits, labels, vocab_real):
+    """Mean CE over valid labels (label = -1 marks padding). fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)

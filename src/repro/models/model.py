@@ -1,0 +1,190 @@
+"""Unified model API over all ten assigned architectures.
+
+``build_model(cfg)`` returns a :class:`Model` whose five pure functions are
+the complete surface the runtime (train/serve/dry-run) needs:
+
+    init(key)                   -> params
+    loss(params, batch)         -> scalar  (teacher-forced LM loss)
+    prefill(params, batch)      -> (last-token logits, cache)
+    decode(params, token, cache)-> (logits, cache)       one step
+    init_cache(batch, max_len)  -> zeroed decode cache
+
+``input_specs(cfg, cell)`` provides ShapeDtypeStruct stand-ins for every
+model input of a shape cell (weak-type-correct, shardable, no allocation) —
+the contract the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import frontends
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    loss: Callable[[Any, dict], jnp.ndarray]
+    prefill: Callable[[Any, dict], tuple]
+    decode: Callable[[Any, jnp.ndarray, Any], tuple]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as T
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: T.init_lm_params(cfg, key),
+            loss=lambda p, b: T.lm_loss(p, cfg, b),
+            prefill=lambda p, b: T.lm_prefill(p, cfg, b),
+            decode=lambda p, t, c: T.lm_decode(p, cfg, t, c),
+            init_cache=lambda batch, max_len, dtype=None: T.init_decode_cache(
+                cfg, batch, max_len, dtype
+            ),
+        )
+    if fam == "ssm":
+        from repro.models import hybrid as H
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: H.init_ssm_lm_params(cfg, key),
+            loss=lambda p, b: H.ssm_lm_loss(p, cfg, b),
+            prefill=lambda p, b: H.ssm_lm_prefill(p, cfg, b),
+            decode=lambda p, t, c: H.ssm_lm_decode(p, cfg, t, c),
+            init_cache=lambda batch, max_len=None, dtype=None: H.init_ssm_lm_cache(
+                cfg, batch, max_len, dtype
+            ),
+        )
+    if fam == "hybrid":
+        from repro.models import hybrid as H
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: H.init_hybrid_params(cfg, key),
+            loss=lambda p, b: H.hybrid_loss(p, cfg, b),
+            prefill=lambda p, b: H.hybrid_prefill(p, cfg, b),
+            decode=lambda p, t, c: H.hybrid_decode(p, cfg, t, c),
+            init_cache=lambda batch, max_len, dtype=None: H.init_hybrid_cache(
+                cfg, batch, max_len, dtype
+            ),
+        )
+    if fam == "encdec":
+        from repro.models import encdec as E
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: E.init_encdec_params(cfg, key),
+            loss=lambda p, b: E.encdec_loss(p, cfg, b),
+            prefill=lambda p, b: E.encdec_prefill(p, cfg, b),
+            decode=lambda p, t, c: E.encdec_decode(p, cfg, t, c),
+            init_cache=lambda batch, max_len, dtype=None: E.init_encdec_cache(
+                cfg, batch, max_len, dtype
+            ),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shape-cell input specs (dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def text_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """Token count the text stream contributes to a cell's seq_len.
+
+    VLM cells budget ``n_patches`` positions for image tokens; enc-dec cells
+    budget ``enc_seq`` frames for the encoder (DESIGN.md §4)."""
+    if cfg.family == "vlm":
+        t = cell.seq_len - cfg.n_patches
+    elif cfg.family == "encdec":
+        t = cell.seq_len - cfg.enc_seq
+    else:
+        t = cell.seq_len
+    if t <= 0:
+        raise ValueError(
+            f"{cfg.name}: cell {cell.name} seq_len {cell.seq_len} too short for "
+            f"the modality prefix"
+        )
+    return t
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for every input of the cell's step function.
+
+    train  -> {'batch': {tokens, labels[, patches|frames]}}
+    prefill-> {'batch': {tokens[, patches|frames]}}
+    decode -> {'token': (B,) int32, 'cache': <family cache tree>}
+    """
+    b = cell.global_batch
+    tl = text_len(cfg, cell)
+    tok = jax.ShapeDtypeStruct((b, tl), jnp.int32)
+
+    def modality(batch_dict):
+        if cfg.family == "vlm":
+            batch_dict["patches"] = frontends.vision_patch_spec(cfg, b)
+        elif cfg.family == "encdec":
+            batch_dict["frames"] = frontends.audio_frame_spec(cfg, b)
+        return batch_dict
+
+    if cell.kind == "train":
+        return {"batch": modality({"tokens": tok, "labels": tok})}
+    if cell.kind == "prefill":
+        return {"batch": modality({"tokens": tok})}
+    if cell.kind == "decode":
+        model = build_model(cfg)
+        max_len = tl if cfg.family == "encdec" else cell.seq_len
+        cache = jax.eval_shape(lambda: model.init_cache(b, max_len))
+        # Mark the cache as "fully populated" semantically; shapes only.
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32), "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def prepare_decode_cache(cfg: ModelConfig, cache, max_len: int):
+    """Pad/convert a *prefill* cache so ``decode`` can run to ``max_len``
+    total context.  Dense/MoE/VLM: pad the sequence axis (or build the
+    sliding-window ring).  Hybrid: pad the shared-attn KV.  Enc-dec: pad the
+    decoder self-attn KV.  SSM: O(1) state, nothing to pad."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import ring_cache_from_prefill
+
+        return ring_cache_from_prefill(cache, cfg, max_len)
+    if cfg.family == "ssm":
+        return cache
+
+    def pad_seq(x, target, axis=2):
+        s = x.shape[axis]
+        if s >= target:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, target - s)
+        return jnp.pad(x, widths)
+
+    out = dict(cache)
+    if cfg.family == "hybrid":
+        out["k"] = pad_seq(cache["k"], max_len)
+        out["v"] = pad_seq(cache["v"], max_len)
+    elif cfg.family == "encdec":
+        out["self_k"] = pad_seq(cache["self_k"], max_len)
+        out["self_v"] = pad_seq(cache["self_v"], max_len)
+    return out
+
+
+def demo_batch(cfg: ModelConfig, key, batch: int, seq: int) -> dict:
+    """Concrete runnable batch (tests/examples) matching the train contract."""
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab, jnp.int32)
+    out = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        out["patches"] = frontends.fake_patches(k2, cfg, batch)
+    elif cfg.family == "encdec":
+        out["frames"] = frontends.fake_frames(k2, cfg, batch)
+    return out

@@ -1,0 +1,282 @@
+"""Mamba2 (SSD — state-space duality) block, chunked parallel form.
+
+Implements the SSD algorithm from arXiv:2405.21060: within chunks of length
+Q the token-mixing is the quadratic "attention-like" form masked by the decay
+kernel; across chunks a linear recurrence carries the (H, N, P) state.  Decode
+is the O(1)-per-token recurrent form; training/prefill is O(L·Q) — this is
+what makes the ``long_500k`` cell feasible for SSM/hybrid archs.
+
+Deviations from the reference CUDA implementation (DESIGN.md §8): projections
+are stored unfused (separate z/x/B/C/dt matrices) so each can carry its own
+TP sharding — heads shard over the model axis, the small B/C/dt projections
+replicate.  Math is identical.
+
+All decay/softmax-free accumulations run in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import gated_rmsnorm, he_init, rmsnorm_params
+
+
+def ssm_params(key, cfg, dtype, d_model=None):
+    d = d_model or cfg.d_model
+    h, p, n, g, w = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.ssm_groups,
+        cfg.conv_width,
+    )
+    din = h * p
+    ks = jax.random.split(key, 10)
+    rng = np.random.default_rng(0)
+    a_init = jnp.asarray(np.log(rng.uniform(1.0, 16.0, size=h)), jnp.float32)
+    dt0 = rng.uniform(1e-3, 1e-1, size=h)
+    dt_bias = jnp.asarray(np.log(np.expm1(dt0)), jnp.float32)
+    return {
+        "wz": he_init(ks[0], (d, din), dtype),
+        "wx": he_init(ks[1], (d, din), dtype),
+        "wb": he_init(ks[2], (d, g * n), dtype),
+        "wc": he_init(ks[3], (d, g * n), dtype),
+        "wdt": he_init(ks[4], (d, h), dtype),
+        "conv_x": he_init(ks[5], (w, din), dtype, fan_in=w),
+        "conv_b": he_init(ks[6], (w, g * n), dtype, fan_in=w),
+        "conv_c": he_init(ks[7], (w, g * n), dtype, fan_in=w),
+        "a_log": a_init,
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": rmsnorm_params(din, dtype),
+        "w_out": he_init(ks[8], (din, d), dtype, fan_in=din),
+    }
+
+
+def _causal_conv(u, kernel):
+    """Depthwise causal conv. u: (B, L, C); kernel: (W, C)."""
+    w = kernel.shape[0]
+    up = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    l = u.shape[1]
+    out = sum(up[:, i : i + l, :] * kernel[i][None, None, :] for i in range(w))
+    return out
+
+
+def _conv_step(u_t, tail, kernel):
+    """One-token conv. u_t: (B, C); tail: (B, W-1, C) previous inputs."""
+    window = jnp.concatenate([tail, u_t[:, None, :]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, kernel)
+    return out, window[:, 1:, :]
+
+
+def _groups_to_heads(t, h):
+    """(B, ..., G, N) -> (B, ..., H, N) by contiguous block mapping."""
+    g = t.shape[-2]
+    rep = h // g
+    return jnp.repeat(t, rep, axis=-2)
+
+
+def ssd_scan(xdt, da_cum, b_h, c_h, h0=None, chunk=256):
+    """Chunked SSD core.
+
+    xdt:   (B, L, H, P)  inputs pre-multiplied by dt (fp32)
+    da_cum:(B, L, H)     inclusive cumsum of dt*A *within the full sequence
+                         is NOT required — pass per-position dt*A instead.
+    Here da_cum is the raw per-position dt*A (negative); cumsum happens
+    per-chunk internally.
+    b_h/c_h: (B, L, H, N) fp32.
+    Returns (y (B, L, H, P) fp32, h_final (B, H, N, P) fp32).
+
+    named_scope "ssd_vmem": served on TPU by kernels/ssd (the (Q,Q)
+    intra-chunk form stays in VMEM); roofline discounts interior traffic.
+    Rematerialised so backward recomputes the intra-chunk quadratic form
+    instead of saving it (the production SSD-kernel backward).
+    """
+
+    def fwd(xdt_, da_, b_, c_, h0_):
+        with jax.named_scope("ssd_vmem"):
+            return _ssd_scan_body(xdt_, da_, b_, c_, h0_, chunk)
+
+    # Pad to a chunk multiple: da=0 padding has decay exp(0)=1 and zero
+    # input contribution, so the carried state is unchanged.
+    l = xdt.shape[1]
+    q = int(min(chunk, l))
+    pad = (-l) % q
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da_cum = jnp.pad(da_cum, ((0, 0), (0, pad), (0, 0)))
+        b_h = jnp.pad(b_h, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_h = jnp.pad(c_h, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, h_final = jax.checkpoint(fwd)(xdt, da_cum, b_h, c_h, h0)
+    return y[:, :l], h_final
+
+
+def _ssd_scan_body(xdt, da_cum, b_h, c_h, h0, chunk):
+    bsz, l, h, p = xdt.shape
+    n = b_h.shape[-1]
+    q = int(min(chunk, l))
+    assert l % q == 0, f"sequence {l} not a multiple of ssd chunk {q}"
+    nc = l // q
+
+    def r(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+
+    xdt_c, da_c, b_c, c_c = r(xdt), r(da_cum), r(b_h), r(c_h)
+    cum = jnp.cumsum(da_c, axis=2)  # (B, nc, Q, H) inclusive
+    cum_last = cum[:, :, -1:, :]  # (B, nc, 1, H)
+
+    # Intra-chunk quadratic form: seg[i,j] = exp(cum_i - cum_j), i >= j.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    iu = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(iu[None, None, :, :, None], jnp.exp(seg), 0.0)
+    att = jnp.einsum("bcihn,bcjhn->bcijh", c_c, b_c) * seg
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xdt_c)
+
+    # Per-chunk boundary states: S_c = sum_j exp(cum_last - cum_j) B_j (x dt)_j.
+    w_decay = jnp.exp(cum_last - cum)  # (B, nc, Q, H)
+    s_chunk = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", b_c, w_decay, xdt_c)
+    chunk_decay = jnp.exp(cum_last[:, :, 0, :])  # (B, nc, H)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def body(carry, xs):
+        s_c, decay_c = xs  # (B,H,N,P), (B,H)
+        h_next = carry * decay_c[:, :, None, None] + s_c
+        return h_next, carry  # emit state *before* this chunk
+
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nc, B, H)
+    s_t = jnp.moveaxis(s_chunk, 1, 0)  # (nc, B, H, N, P)
+    h_final, h_befores = jax.lax.scan(body, h0, (s_t, decay_t))
+    h_befores = jnp.moveaxis(h_befores, 0, 1)  # (B, nc, H, N, P)
+
+    # Inter-chunk contribution: y_i += exp(cum_i) * C_i . h_before.
+    y_inter = jnp.einsum(
+        "bcihn,bcih,bchnp->bcihp", c_c, jnp.exp(cum), h_befores
+    )
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y, h_final
+
+
+def ssm_apply(params, x, cfg, initial=None):
+    """Full Mamba2 block over a sequence. x: (B, L, d).
+
+    Returns (y (B, L, d), cache) where cache = {'state', 'conv_x/b/c'} for
+    continuing in decode mode.
+    """
+    h, p, w = cfg.ssm_heads, cfg.ssm_head_dim, cfg.conv_width
+    bsz, l, _ = x.shape
+    z = x @ params["wz"]
+    xr = x @ params["wx"]
+    br = x @ params["wb"]
+    cr = x @ params["wc"]
+    dt_raw = (x @ params["wdt"]).astype(jnp.float32)
+
+    if initial is not None:
+        xr_c = jnp.concatenate([initial["conv_x"].astype(xr.dtype), xr], axis=1)
+        br_c = jnp.concatenate([initial["conv_b"].astype(br.dtype), br], axis=1)
+        cr_c = jnp.concatenate([initial["conv_c"].astype(cr.dtype), cr], axis=1)
+        xc = _causal_conv(xr_c, params["conv_x"])[:, w - 1 :, :]
+        bc = _causal_conv(br_c, params["conv_b"])[:, w - 1 :, :]
+        cc = _causal_conv(cr_c, params["conv_c"])[:, w - 1 :, :]
+    else:
+        xc = _causal_conv(xr, params["conv_x"])
+        bc = _causal_conv(br, params["conv_b"])
+        cc = _causal_conv(cr, params["conv_c"])
+    xc, bc, cc = jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc)
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"][None, None, :])  # (B,L,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    da = dt * a[None, None, :]
+
+    xh = xc.reshape(bsz, l, h, p).astype(jnp.float32)
+    bh = _groups_to_heads(
+        bc.reshape(bsz, l, cfg.ssm_groups, cfg.ssm_state).astype(jnp.float32), h
+    )
+    ch = _groups_to_heads(
+        cc.reshape(bsz, l, cfg.ssm_groups, cfg.ssm_state).astype(jnp.float32), h
+    )
+    xdt = xh * dt[..., None]
+    h0 = initial["state"] if initial is not None else None
+    y, h_final = ssd_scan(xdt, da, bh, ch, h0=h0, chunk=cfg.ssm_chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, l, h * p).astype(x.dtype)
+
+    y = gated_rmsnorm(y, z, params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    cache = {
+        "state": h_final,
+        "conv_x": xr[:, l - (w - 1) :, :] if l >= w - 1 else _pad_tail(xr, w - 1, initial, "conv_x"),
+        "conv_b": br[:, l - (w - 1) :, :] if l >= w - 1 else _pad_tail(br, w - 1, initial, "conv_b"),
+        "conv_c": cr[:, l - (w - 1) :, :] if l >= w - 1 else _pad_tail(cr, w - 1, initial, "conv_c"),
+    }
+    return out, cache
+
+
+def _pad_tail(u, tail_len, initial, key):
+    prev = (
+        initial[key]
+        if initial is not None
+        else jnp.zeros((u.shape[0], tail_len, u.shape[2]), u.dtype)
+    )
+    return jnp.concatenate([prev, u], axis=1)[:, -tail_len:, :]
+
+
+def ssm_decode_step(params, x_t, cache, cfg):
+    """One-token recurrent step. x_t: (B, d); cache from ssm_apply/init.
+
+    Returns (y_t (B, d), new cache).
+    """
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    bsz = x_t.shape[0]
+    z = x_t @ params["wz"]
+    xr = x_t @ params["wx"]
+    br = x_t @ params["wb"]
+    cr = x_t @ params["wc"]
+    dt_raw = (x_t @ params["wdt"]).astype(jnp.float32)
+
+    xc, conv_x = _conv_step(xr, cache["conv_x"].astype(xr.dtype), params["conv_x"])
+    bc, conv_b = _conv_step(br, cache["conv_b"].astype(br.dtype), params["conv_b"])
+    cc, conv_c = _conv_step(cr, cache["conv_c"].astype(cr.dtype), params["conv_c"])
+    xc, bc, cc = jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc)
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"][None, :])  # (B, H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None, :])  # (B, H)
+
+    xh = xc.reshape(bsz, h, p).astype(jnp.float32)
+    bh = _groups_to_heads(
+        bc.reshape(bsz, cfg.ssm_groups, n).astype(jnp.float32), h
+    )
+    ch = _groups_to_heads(
+        cc.reshape(bsz, cfg.ssm_groups, n).astype(jnp.float32), h
+    )
+    xdt = xh * dt[..., None]  # (B, H, P)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", bh, xdt
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)  # (B, H, P)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, h * p).astype(x_t.dtype)
+    y = gated_rmsnorm(y[:, None, :], z[:, None, :], params["norm"], cfg.norm_eps)[:, 0]
+    out = y @ params["w_out"]
+    return out, {"state": state, "conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c}
+
+
+def ssm_init_cache(cfg, batch, dtype=jnp.bfloat16, d_model=None):
+    h, p, n, w, g = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.conv_width,
+        cfg.ssm_groups,
+    )
+    din = h * p
+    return {
+        "state": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, din), dtype),
+        "conv_b": jnp.zeros((batch, w - 1, g * n), dtype),
+        "conv_c": jnp.zeros((batch, w - 1, g * n), dtype),
+    }

@@ -1,0 +1,324 @@
+"""Decoder-only LM assembly (dense / MoE / VLM families).
+
+Layer params are stacked (leading depth axis) and the stack is a single
+``jax.lax.scan`` (+ optional remat), so HLO size is depth-independent.
+
+Loss uses *chunked* cross-entropy: logits are produced and reduced in
+sequence chunks inside a scan so the (B, S, vocab) tensor never
+materialises — with a 256 k vocab (Nemotron) that tensor would be tens of
+GB per device at train_4k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_params
+from repro.models.layers import (
+    cross_entropy,
+    embed_apply,
+    embed_params,
+    he_init,
+    lm_head_params,
+    mlp_apply,
+    mlp_params,
+    pdtype,
+    rmsnorm,
+    rmsnorm_params,
+)
+from repro.models.moe import moe_apply, moe_params
+from repro.models.frontends import VISION_DIM
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_layer_params(cfg, key, init_one):
+    """vmap a single-layer initializer over stacked per-layer keys."""
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def init_lm_params(cfg, key):
+    dtype = pdtype(cfg)
+    k_embed, k_layers, k_head, k_patch = jax.random.split(key, 4)
+
+    def one_layer(k):
+        ka, km = jax.random.split(k)
+        p = {
+            "ln1": rmsnorm_params(cfg.d_model, dtype),
+            "attn": attn_params(ka, cfg, dtype),
+            "ln2": rmsnorm_params(cfg.d_model, dtype),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe_params(km, cfg, dtype)
+        else:
+            p["mlp"] = mlp_params(km, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        return p
+
+    params = {
+        "embed": embed_params(k_embed, cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": _stack_layer_params(cfg, k_layers, one_layer),
+        "final_norm": rmsnorm_params(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_params(k_head, cfg.vocab_padded, cfg.d_model, dtype)
+    if cfg.family == "vlm":
+        params["patch_proj"] = he_init(k_patch, (VISION_DIM, cfg.d_model), dtype)
+    return params
+
+
+def head_weight(params):
+    return params.get("lm_head", {"w": params["embed"]["table"]})["w"]
+
+
+# ---------------------------------------------------------------------------
+# Layer body + stack
+# ---------------------------------------------------------------------------
+
+
+def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, new_kv = attn_apply(
+        lp["attn"], h, cfg, pos=pos, cache=cache_kv, cache_len=cache_len
+    )
+    x = x + attn_out
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        inference = want_cache or cache_kv is not None  # prefill/decode
+        ffn_out, aux = moe_apply(lp["moe"], h2, cfg, inference=inference)
+    else:
+        ffn_out, aux = mlp_apply(lp["mlp"], h2, cfg.act), jnp.float32(0)
+    x = x + ffn_out
+    if not want_cache:
+        new_kv = None
+    return x, new_kv, aux
+
+
+def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
+    """x: (B, S, d). cache: {'k','v'} stacked (L, B, Smax, Hkv, hd) + 'len'
+    [+ 'pos' (L, B, Smax) for sliding-window ring caches].
+
+    Returns (x_final, new_cache_stack_or_None, aux_sum).
+    """
+    remat = cfg.remat if remat is None else remat
+    cache_len = cache["len"] if cache is not None else jnp.int32(0)
+    ring = cache is not None and "pos" in cache
+    staged = cache is not None and "sk" in cache
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        if cache is not None:
+            lp, *kv = xs
+            kv = tuple(kv)
+        else:
+            lp = xs
+            kv = None
+        x, new_kv, aux = _layer_seq(lp, x, cfg, pos, kv, cache_len, want_cache or cache is not None)
+        ys = new_kv if (want_cache or cache is not None) else None
+        return (x, aux_acc + aux), ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cache is None:
+        xs = params["layers"]
+    elif staged:
+        xs = (params["layers"], cache["k"], cache["v"], cache["sk"], cache["sv"])
+    elif ring:
+        xs = (params["layers"], cache["k"], cache["v"], cache["pos"])
+    else:
+        xs = (params["layers"], cache["k"], cache["v"])
+    (x, aux), kv_stack = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    new_cache = None
+    if kv_stack is not None:
+        if len(kv_stack) == 4:
+            ks, vs, sks, svs = kv_stack
+            new_cache = {"k": ks, "v": vs, "sk": sks, "sv": svs}
+        elif len(kv_stack) == 3:
+            ks, vs, ps = kv_stack
+            new_cache = {"k": ks, "v": vs, "pos": ps}
+        else:
+            ks, vs = kv_stack
+            new_cache = {"k": ks, "v": vs}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding front (+ VLM patch prepend)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch):
+    """Returns (x (B, S, d), pos (B, S))."""
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, pos
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce(x_final, head_w, labels, vocab_real, chunk=1024):
+    """Mean CE without materialising (B, S, V). labels -1 = ignore."""
+    b, s, d = x_final.shape
+    chunk = int(min(chunk, s))
+    pad = (-s) % chunk
+    if pad:
+        x_final = jnp.pad(x_final, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    xc = jnp.moveaxis(x_final.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    vpad = head_w.shape[0]
+    vmask = (jnp.arange(vpad) < vocab_real)[None, None, :]
+
+    def body(carry, xs):
+        nll_sum, count = carry
+        xi, li = xs
+        logits = jnp.einsum("bcd,vd->bcv", xi, head_w).astype(jnp.float32)
+        logits = jnp.where(vmask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        valid = (li >= 0).astype(jnp.float32)
+        nll_sum = nll_sum + ((logz - gold) * valid).sum()
+        count = count + valid.sum()
+        return (nll_sum, count), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg, batch):
+    """batch: tokens (B,S_text), labels (B,S_text) [, patches (B,P,VISION_DIM)].
+
+    VLM: patch positions are prepended and excluded from the loss.
+    """
+    x, pos = embed_inputs(params, cfg, batch)
+    x, _, aux = run_stack(params, cfg, x, pos)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        p = x.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], p), -1, labels.dtype), labels], axis=1
+        )
+    loss = chunked_ce(x, head_weight(params), labels, cfg.vocab)
+    return loss + 0.01 * aux
+
+
+def lm_prefill(params, cfg, batch):
+    """Returns (last-token logits (B, Vpad), cache)."""
+    x, pos = embed_inputs(params, cfg, batch)
+    x, cache, _ = run_stack(params, cfg, x, pos, want_cache=True, remat=False)
+    x_last = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x_last, head_weight(params))[:, 0]
+    cache["len"] = jnp.int32(x.shape[1])
+    return logits.astype(jnp.float32), cache
+
+
+def lm_decode(params, cfg, token, cache):
+    """token: (B,) int32; cache from prefill or init_decode_cache.
+
+    Returns (logits (B, Vpad), new cache).
+    """
+    x = embed_apply(params["embed"], token[:, None])
+    pos = jnp.broadcast_to(cache["len"], (x.shape[0], 1)).astype(jnp.int32)
+    x, new_cache, _ = run_stack(params, cfg, x, pos, cache=cache, remat=False)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, head_weight(params))[:, 0]
+    new_cache["len"] = cache["len"] + 1
+    return logits.astype(jnp.float32), new_cache
+
+
+def init_decode_cache(cfg, batch, max_len, dtype=None):
+    """Sliding-window archs get a ring buffer of the window size (the cache
+    for a ``max_len`` context is bounded by the window — Mixtral's SWA is
+    exactly why its ``long_500k`` cell is feasible)."""
+    dtype = dtype or pdtype(cfg)
+    ring = 0 < cfg.attn_window < max_len
+    s_cache = cfg.attn_window if ring else max_len
+    shape = (cfg.n_layers, batch, s_cache, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.int32(0),
+    }
+    if ring:
+        cache["pos"] = jnp.full((cfg.n_layers, batch, s_cache), -1, jnp.int32)
+    elif cfg.decode_staging > 0:
+        ws = cfg.decode_staging
+        sshape = (cfg.n_layers, batch, ws, cfg.n_kv_heads, cfg.head_dim)
+        cache["sk"] = jnp.zeros(sshape, dtype)
+        cache["sv"] = jnp.zeros(sshape, dtype)
+    return cache
+
+
+def flush_staging(cache, cfg):
+    """Fold the staging ring into the main cache (run every
+    ``cfg.decode_staging`` steps by the serving engine; one DUS of ws
+    tokens per layer — amortised cost ~1/ws of a full-cache rewrite)."""
+    ws = cache["sk"].shape[2]
+    # at a flush boundary (len % ws == 0) the ring holds ws entries
+    staged_n = ((cache["len"] - 1) % ws) + 1
+    start = cache["len"] - staged_n
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], cache["sk"].astype(cache["k"].dtype), (0, 0, start, 0, 0)
+    )
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], cache["sv"].astype(cache["v"].dtype), (0, 0, start, 0, 0)
+    )
+    return {**cache, "k": k, "v": v,
+            "sk": jnp.zeros_like(cache["sk"]), "sv": jnp.zeros_like(cache["sv"])}
+
+
+def ring_cache_from_prefill(cache, cfg, max_len):
+    """Convert a full-length prefill cache {'k','v','len'} for decoding up to
+    ``max_len`` total context.  Sliding-window archs get a ring buffer of the
+    window size holding the last ``window`` prefill tokens at slots
+    ``pos % window``; full-attention archs get the sequence axis padded."""
+    s = cache["k"].shape[2]
+    w = cfg.attn_window
+    if not (0 < w < max_len):
+        out = dict(cache)
+        if s < max_len:
+            pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+            out["k"] = jnp.pad(cache["k"], pad)
+            out["v"] = jnp.pad(cache["v"], pad)
+        if cfg.decode_staging > 0 and "sk" not in out:
+            l, b = out["k"].shape[0], out["k"].shape[1]
+            sshape = (l, b, cfg.decode_staging, cfg.n_kv_heads, cfg.head_dim)
+            out["sk"] = jnp.zeros(sshape, out["k"].dtype)
+            out["sv"] = jnp.zeros(sshape, out["v"].dtype)
+        return out
+    keep = min(s, w)
+    k_tail = cache["k"][:, :, s - keep :]
+    v_tail = cache["v"][:, :, s - keep :]
+    ln = cache["len"]
+    abs_pos = ln - keep + jnp.arange(keep, dtype=jnp.int32)
+    slots = abs_pos % w
+    l, b = k_tail.shape[0], k_tail.shape[1]
+    shape = (l, b, w) + k_tail.shape[3:]
+    k = jnp.zeros(shape, k_tail.dtype).at[:, :, slots].set(k_tail)
+    v = jnp.zeros(shape, v_tail.dtype).at[:, :, slots].set(v_tail)
+    pos = jnp.full((l, b, w), -1, jnp.int32).at[:, :, slots].set(
+        jnp.broadcast_to(abs_pos, (l, b, keep))
+    )
+    return {"k": k, "v": v, "pos": pos, "len": cache["len"]}

@@ -1,0 +1,4 @@
+"""Optimizer substrate (pure-pytree AdamW + distributed gradient utilities)."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.grad_utils import clip_by_global_norm, global_norm  # noqa: F401

@@ -1,0 +1,97 @@
+"""Gradient utilities: global-norm clipping, microbatch accumulation, and
+error-feedback int8 gradient compression (the paper's bit-level insight
+applied to the DP all-reduce — DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Microbatch gradient accumulation (lax.scan over microbatches)
+# ---------------------------------------------------------------------------
+
+
+def accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """Mean loss/grads over ``n_micro`` microbatches via scan.
+
+    ``batch`` leaves are (B, ...); B must divide by n_micro.  Activation
+    memory scales with B/n_micro while the math matches the full batch.
+    """
+    if n_micro <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} % n_micro {n_micro} != 0"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+        return (loss_acc + loss, g_acc), None
+
+    (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.float32(0), g0), micro)
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback int8 gradient compression (optional DP trick)
+# ---------------------------------------------------------------------------
+
+
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray):
+    """Quantize g+err to int8 with a per-tensor scale; returns
+    (q, scale, new_err).  The residual carries to the next step (EF-SGD),
+    so the compression bias vanishes in expectation."""
+    target = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(target)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    new_err = target - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, err_tree):
+    """Tree-mapped EF compression. Returns (q_tree, scale_tree, new_err_tree)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    qs, ss, es = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_int8(g, e)
+        qs.append(q)
+        ss.append(s)
+        es.append(ne)
+    return (
+        treedef.unflatten(qs),
+        treedef.unflatten(ss),
+        treedef.unflatten(es),
+    )
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

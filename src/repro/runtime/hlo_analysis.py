@@ -1,0 +1,513 @@
+"""Compiled-artifact analysis: trip-count-aware FLOPs / HBM bytes /
+collective traffic, and the three-term roofline.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's HloCostAnalysis counts a
+``while`` body ONCE, but our models scan over layers (trip counts 2–81), so
+raw cost_analysis under-reports compute, bytes and (textually parsed)
+collectives by the trip count.  This module parses the *optimized* HLO
+(``compiled.as_text()``), builds the computation call graph, multiplies each
+computation by its execution count (``known_trip_count`` backend-config on
+while ops, with a condition-constant fallback), and accumulates:
+
+  flops        — dot/convolution FLOPs (2 · prod(out_dims) · prod(contracted))
+                 (elementwise/transcendental FLOPs are ignored: <1 % of any
+                 cell's total next to the matmuls; documented in DESIGN.md)
+  hbm bytes    — per op: operand bytes + output bytes, at fusion granularity
+                 (mirrors HloCostAnalysis' convention), skipping pure
+                 metadata ops (tuple/gte/parameter/bitcast/constant/while)
+  collectives  — per-device link bytes with the ring model:
+                   all-reduce          2 · size · (n-1)/n
+                   all-gather          size · (n-1)/n   (size = full result)
+                   reduce-scatter      size · (n-1)/n   (size = full input)
+                   all-to-all          size · (n-1)/n
+                   collective-permute  size
+
+The raw cost_analysis numbers are kept alongside for cross-checking (they
+should match the parser's body-once totals to first order).
+
+Hardware model: TPU v5e-class chip — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment constants).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+
+# --- hardware constants (assignment) ---------------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Ops whose operand/output bytes do NOT represent real memory traffic.
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "opt-barrier", "custom-call",  # custom-calls counted separately if known
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\s*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<rest>.*)$"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list  # [_Op]
+    symbols: dict  # name -> type_str
+
+
+def _parse_computations(hlo: str) -> dict:
+    comps, cur, cur_name = {}, None, None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip()) if line and not line.startswith(" ") else None
+        if hdr and "{" in line:
+            cur_name = hdr.group(1)
+            cur = _Computation(cur_name, [], {})
+            comps[cur_name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = _Op(m.group("name"), m.group("type"), m.group("op"), line)
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    return comps
+
+
+def _execution_counts(comps: dict, entry: str) -> dict:
+    """computation name -> total execution count (trip-count products)."""
+    counts: dict = defaultdict(float)
+    seen_stack = set()
+
+    def visit(comp_name: str, mult: float):
+        if comp_name not in comps or comp_name in seen_stack:
+            return
+        counts[comp_name] += mult
+        seen_stack.add(comp_name)
+        comp = comps[comp_name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = float(tm.group(1))
+                body = re.search(r"body=%?([\w.\-]+)", op.line)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if body:
+                    visit(body.group(1), mult * trip)
+                if cond:
+                    visit(cond.group(1), mult * (trip + 1))
+            else:
+                cm = _CALLED_RE.search(op.line)
+                if cm:
+                    for callee in re.split(r",\s*%?", cm.group(1)):
+                        visit(callee.strip().lstrip("%"), mult)
+        seen_stack.discard(comp_name)
+
+    visit(entry, 1.0)
+    return counts
+
+
+def _operand_names(op: _Op) -> list:
+    ops_part = op.line.split(f"{op.opcode}(", 1)[-1].split(")", 1)[0]
+    return _OPERANDS_RE.findall(ops_part)
+
+
+def _effective_fusion_bytes(callee: _Computation) -> tuple:
+    """(input_bytes, output_override) for one fusion computation.
+
+    * a parameter consumed ONLY by dynamic-slice ops contributes the slice
+      output bytes (stacked-layer weight fetch inside a scan), not the full
+      operand;
+    * a ROOT dynamic-update-slice whose base is a raw parameter is an
+      in-place buffer update: only the update slice moves (KV-cache append),
+      so the output contribution is overridden with the update size and the
+      aliased parameter is not charged.
+    """
+    uses = defaultdict(list)
+    for op in callee.ops:
+        for oname in _operand_names(op):
+            uses[oname].append(op)
+    params = {op.name: op for op in callee.ops if op.opcode == "parameter"}
+
+    by_name = {op.name: op for op in callee.ops}
+    root = callee.ops[-1] if callee.ops else None
+    # Walk back through pure dtype converts/copies/bitcasts: a ROOT
+    # convert(dynamic-update-slice(...)) is still an in-place update
+    # (the convert is a CPU bf16-legalization artifact, free on TPU).
+    seen = 0
+    while root is not None and root.opcode in ("convert", "copy", "bitcast") and seen < 4:
+        onames = _operand_names(root)
+        root = by_name.get(onames[0]) if onames else None
+        seen += 1
+    aliased_param = None
+    out_override = None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        onames = _operand_names(root)
+        if len(onames) >= 2:
+            upd_t = callee.symbols.get(onames[1])
+            if upd_t is not None:
+                out_override = float(_type_bytes(upd_t)) * 2  # read+write slice
+            base = onames[0]
+            # base may reach a parameter through converts
+            seen = 0
+            while base not in params and base in by_name and by_name[base].opcode in ("convert", "copy", "bitcast") and seen < 4:
+                bn = _operand_names(by_name[base])
+                base = bn[0] if bn else base
+                seen += 1
+            if base in params:
+                aliased_param = base
+
+    bytes_in = 0.0
+    for pname, pop in params.items():
+        if pname == aliased_param:
+            continue
+        # Look through converts: param -> convert -> dynamic-slice is still
+        # a sliced fetch (count the slice, not the stack).
+        consumers = list(uses.get(pname, []))
+        expanded, hops = [], 0
+        while consumers and hops < 5:
+            nxt = []
+            for c in consumers:
+                if c.opcode in ("convert", "copy", "bitcast"):
+                    nxt.extend(uses.get(c.name, []))
+                else:
+                    expanded.append(c)
+            consumers = nxt
+            hops += 1
+        if expanded and all(c.opcode == "dynamic-slice" for c in expanded):
+            bytes_in += sum(_type_bytes(c.type_str) for c in expanded)
+        else:
+            bytes_in += _type_bytes(pop.type_str)
+    return bytes_in, out_override
+
+
+def _find_entry(hlo: str) -> str:
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                return m.group(1)
+    raise ValueError("no ENTRY computation found")
+
+
+#: named_scope regions whose interior HBM traffic is VMEM-resident under the
+#: corresponding validated Pallas kernel (see kernels/<name>/kernel.py); the
+#: analyzer discounts their bytes and the dry-run charges analytic kernel
+#: boundary bytes instead.
+VMEM_SCOPES = ("flash_vmem", "decode_attn_vmem", "ssd_vmem")
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Trip-count-aware totals for one compiled per-device module."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_link_bytes: float = 0.0
+    vmem_discounted_bytes: float = 0.0  # interior bytes credited to kernels
+    collectives_by_op: dict = dataclasses.field(default_factory=dict)
+    collectives_by_meta: dict = dataclasses.field(default_factory=dict)
+    dot_flops_by_meta: dict = dataclasses.field(default_factory=dict)
+
+    def top_collectives(self, n: int = 8) -> str:
+        rows = sorted(
+            self.collectives_by_meta.items(), key=lambda kv: -kv[1]
+        )[:n]
+        return "\n".join(
+            f"    {b / 1e9:9.2f} GB  {meta[:110]}" for meta, b in rows
+        )
+
+    def summary(self) -> str:
+        rows = [
+            f"    {op:22s} n={int(cnt):6d}  {b / 1e6:12.2f} MB link"
+            for op, (cnt, b) in sorted(self.collectives_by_op.items())
+        ]
+        return "\n".join(rows) if rows else "    (no collectives)"
+
+
+def _called_computations(comps: dict) -> set:
+    """Computations invoked via calls=/to_apply= (fusion bodies, reduction
+    lambdas): their bytes are accounted at the call site, never walked."""
+    called = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                continue  # body/condition are control flow — walked normally
+            m = re.search(r"(?:calls|to_apply)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?", op.line)
+            if m:
+                for callee in re.split(r",\s*%?", m.group(1)):
+                    called.add(callee.strip().lstrip("%"))
+    return called
+
+
+def analyse_hlo(hlo: str, vmem_scopes=VMEM_SCOPES) -> HloCost:
+    comps = _parse_computations(hlo)
+    entry = _find_entry(hlo)
+    counts = _execution_counts(comps, entry)
+    fusion_comps = _called_computations(comps)
+    cost = HloCost()
+
+    def _in_vmem_scope(line: str) -> bool:
+        return any(s in line for s in vmem_scopes)
+
+    def _add_bytes(line: str, x: float):
+        if _in_vmem_scope(line):
+            cost.vmem_discounted_bytes += x
+        else:
+            cost.hbm_bytes += x
+
+    for cname, comp in comps.items():
+        mult = counts.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        for op in comp.ops:
+            oc = op.opcode
+            out_bytes = _type_bytes(op.type_str)
+            # ---- FLOPs: dots and convolutions
+            if oc in ("dot", "convolution"):
+                out_dims = _first_shape_dims(op.type_str)
+                contract = 1
+                cm = _CONTRACT_RE.search(op.line)
+                lhs_name = None
+                ops_part = op.line.split(f"{oc}(", 1)[-1]
+                onames = _OPERANDS_RE.findall(ops_part.split(")", 1)[0])
+                if onames:
+                    lhs_name = onames[0]
+                if cm and lhs_name and lhs_name in comp.symbols:
+                    lhs_dims = _first_shape_dims(comp.symbols[lhs_name])
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                fl = 2.0 * math.prod(out_dims or [0]) * contract * mult
+                cost.flops += fl
+                meta = re.search(r'op_name="([^"]+)"', op.line)
+                key = meta.group(1) if meta else op.name
+                cost.dot_flops_by_meta[key] = cost.dot_flops_by_meta.get(key, 0.0) + fl
+            # ---- collectives
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                size = out_bytes
+                gm = _GROUPS_RE.search(op.line)
+                if gm:
+                    n = gm.group(1).count(",") + 1
+                else:
+                    gi = _GROUPS_IOTA_RE.search(op.line)
+                    n = int(gi.group(2)) if gi else 2
+                n = max(n, 2)
+                frac = (n - 1) / n
+                if base == "all-reduce":
+                    link = 2.0 * size * frac
+                elif base == "collective-permute":
+                    link = float(size)
+                else:
+                    link = size * frac
+                link *= mult
+                cnt, tot = cost.collectives_by_op.get(base, (0, 0.0))
+                cost.collectives_by_op[base] = (cnt + mult, tot + link)
+                cost.collective_link_bytes += link
+                meta = re.search(r'op_name="([^"]+)"', op.line)
+                mkey = f"{base} {meta.group(1) if meta else op.name}"
+                cost.collectives_by_meta[mkey] = (
+                    cost.collectives_by_meta.get(mkey, 0.0) + link
+                )
+            # ---- HBM bytes (HloCostAnalysis-style special cases)
+            if cname in fusion_comps:
+                continue  # accounted at the fusion call site
+            if oc in _SKIP_BYTES or oc.endswith("-done") or oc.endswith("-start"):
+                continue
+            if oc == "convert":
+                # Pure dtype casts fuse into consumers on TPU; standalone
+                # materialisation is CPU bf16-legalization noise.
+                continue
+            onames = _operand_names(op)
+            if oc == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", op.line)
+                callee = comps.get(cm.group(1)) if cm else None
+                if callee is not None:
+                    # Pure dtype-cast fusions (convert/bitcast only) are CPU
+                    # bf16-legalization; they do not exist on TPU.
+                    body_ops = {o.opcode for o in callee.ops} - {"parameter"}
+                    if body_ops <= {"convert", "bitcast"}:
+                        continue
+                    in_b, out_override = _effective_fusion_bytes(callee)
+                    _add_bytes(op.line, (in_b + (out_override if out_override is not None else out_bytes)) * mult)
+                else:
+                    _add_bytes(op.line, out_bytes * 2 * mult)
+                continue
+            if oc == "dynamic-slice":
+                _add_bytes(op.line, 2.0 * out_bytes * mult)
+                continue
+            if oc == "dynamic-update-slice":
+                upd = comp.symbols.get(onames[1]) if len(onames) > 1 else None
+                upd_b = _type_bytes(upd) if upd else out_bytes
+                _add_bytes(op.line, 2.0 * upd_b * mult)
+                continue
+            if oc == "gather":
+                idx_b = _type_bytes(comp.symbols.get(onames[1], "")) if len(onames) > 1 else 0
+                _add_bytes(op.line, (2.0 * out_bytes + idx_b) * mult)
+                continue
+            if oc == "scatter":
+                upd_b = _type_bytes(comp.symbols.get(onames[2], "")) if len(onames) > 2 else out_bytes
+                idx_b = _type_bytes(comp.symbols.get(onames[1], "")) if len(onames) > 1 else 0
+                _add_bytes(op.line, (2.0 * upd_b + idx_b + out_bytes) * mult)
+                continue
+            if oc in ("iota", "broadcast", "rng", "rng-bit-generator"):
+                _add_bytes(op.line, out_bytes * mult)
+                continue
+            operand_bytes = 0
+            for oname in onames:
+                t = comp.symbols.get(oname)
+                if t is not None:
+                    operand_bytes += _type_bytes(t)
+            _add_bytes(op.line, (out_bytes + operand_bytes) * mult)
+    return cost
+
+
+# Backwards-compatible thin wrapper used by early dry-run code/tests.
+def collective_stats(hlo_text: str) -> HloCost:
+    return analyse_hlo(hlo_text)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled step on one mesh.
+
+    All three terms are PER-DEVICE seconds (SPMD: the compiled module *is*
+    the per-device program, so its FLOPs/bytes are per-device already)."""
+
+    name: str
+    n_devices: int
+    hlo_flops: float  # per-device FLOPs (trip-count aware)
+    hlo_bytes: float  # per-device HBM bytes
+    collective_link_bytes: float  # per-device link bytes
+    model_flops: float = 0.0  # analytic 6·N·D (whole step, all devices)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_link_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (per-device HLO_FLOPs × devices)."""
+        total = self.hlo_flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """MFU upper bound at the roofline: model FLOPs / (bound time ×
+        fleet peak).  This is the §Perf score for the lowering."""
+        if self.t_bound <= 0:
+            return 0.0
+        return self.model_flops / (self.t_bound * self.n_devices * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return {
+            "name": self.name,
+            "devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "dev_gflops": self.hlo_flops / 1e9,
+            "dev_hbm_gb": self.hlo_bytes / 1e9,
+            "dev_link_mb": self.collective_link_bytes / 1e6,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def cost_terms(compiled) -> tuple:
+    """(flops, bytes) from compiled.cost_analysis() — body-once numbers,
+    kept for cross-checking the parser."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts

@@ -1,0 +1,6 @@
+"""Serving stack: compressed paged KV store, sampler, batched engine with
+context-dependent dynamic quantization (the paper's inference deployment)."""
+
+from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.kv_cache import CompressedKVStore  # noqa: F401
+from repro.serving.sampler import SamplerConfig, sample  # noqa: F401

@@ -1,0 +1,25 @@
+"""Token sampler: greedy / temperature / top-k (jit-friendly)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0  # 0 = greedy
+    top_k: int = 0  # 0 = full softmax
+
+
+def sample(key, logits: jnp.ndarray, cfg: SamplerConfig) -> jnp.ndarray:
+    """logits (B, V) fp32 -> tokens (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

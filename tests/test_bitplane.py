@@ -1,0 +1,72 @@
+"""Property tests: bit-plane disaggregation (paper §III.A)."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitplane as bp
+
+
+@st.composite
+def uint_blocks(draw, bits=16):
+    n = draw(st.integers(1, 64)) * 8
+    data = draw(
+        st.lists(st.integers(0, 2**bits - 1), min_size=n, max_size=n)
+    )
+    return np.array(data, dtype=np.uint16 if bits <= 16 else np.uint32)
+
+
+@given(uint_blocks())
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_np(u):
+    planes = bp.disaggregate_np(u, 16)
+    assert planes.shape == (16, len(u) // 8)
+    back = bp.reaggregate_np(planes, 16)
+    np.testing.assert_array_equal(back, u)
+
+
+@given(uint_blocks())
+@settings(max_examples=25, deadline=None)
+def test_np_jnp_paths_agree(u):
+    p_np = bp.disaggregate_np(u, 16)
+    p_j = np.asarray(bp.disaggregate(jnp.asarray(u.astype(np.uint32)), 16))
+    np.testing.assert_array_equal(p_np, p_j)
+    r_np = bp.reaggregate_np(p_np, 16, keep=7)
+    r_j = np.asarray(bp.reaggregate(jnp.asarray(p_np), 16, keep=7))
+    np.testing.assert_array_equal(r_np.astype(np.uint32), r_j)
+
+
+@pytest.mark.parametrize("spec_name", ["bf16", "fp16", "fp32", "fp8_e4m3", "int8"])
+def test_value_roundtrip_all_formats(spec_name, rng):
+    spec = bp.SPECS[spec_name]
+    if spec.value_np is None:
+        pytest.skip("int4 uses pre-packed nibbles")
+    x = rng.normal(0, 1, 512).astype(np.float32).astype(spec.value_np)
+    u = bp.to_uint_np(x, spec)
+    planes = bp.disaggregate_np(u, spec.bits)
+    back = bp.from_uint_np(bp.reaggregate_np(planes, spec.bits), spec, x.shape)
+    np.testing.assert_array_equal(
+        back.view(spec.uint_np), x.view(spec.uint_np)
+    )
+
+
+def test_partial_plane_fetch_is_truncation(rng):
+    """Top-k plane read == zeroing the low bits (Fig. 5 semantics)."""
+    x = rng.normal(0, 0.02, 4096).astype(ml_dtypes.bfloat16)
+    u = bp.to_uint_np(x, bp.BF16)
+    planes = bp.disaggregate_np(u, 16)
+    for keep in (16, 12, 8, 4, 1):
+        got = bp.reaggregate_np(planes, 16, keep=keep)
+        mask = ~np.uint16((1 << (16 - keep)) - 1)
+        np.testing.assert_array_equal(got, u & mask)
+
+
+def test_plane0_is_sign_bit(rng):
+    x = rng.normal(0, 1, 256).astype(ml_dtypes.bfloat16)
+    u = bp.to_uint_np(x, bp.BF16)
+    planes = bp.disaggregate_np(u, 16)
+    signs = np.unpackbits(planes[0])
+    np.testing.assert_array_equal(signs, (u >> 15) & 1)

@@ -1,0 +1,133 @@
+"""Checkpointing (atomic, compressed, elastic) + fault tolerance."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import latest_step
+from repro.configs.base import get_config
+from repro.data import DataConfig, ShardedLoader
+from repro.models.model import build_model
+from repro.runtime.fault_tolerance import (
+    SimulatedFailure,
+    StragglerDetector,
+    TrainSupervisor,
+)
+
+
+@pytest.fixture()
+def params():
+    model = build_model(get_config("smollm-135m", smoke=True))
+    return model.init(jax.random.PRNGKey(0))
+
+
+def test_roundtrip_bit_exact(tmp_path, params):
+    p = save_checkpoint(str(tmp_path), 3, params, {"note": "x"})
+    restored, extra = load_checkpoint(p, params)
+    assert extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8)
+        )
+
+
+def test_checkpoint_is_compressed(tmp_path, params):
+    p = save_checkpoint(str(tmp_path), 1, params)
+    man = json.load(open(os.path.join(p, "MANIFEST.json")))
+    assert man["ratio"] > 1.15  # bit-plane+zstd on bf16 weights
+
+
+def test_atomic_commit_ignores_tmp(tmp_path, params):
+    save_checkpoint(str(tmp_path), 1, params)
+    # simulate a crashed write
+    os.makedirs(tmp_path / "step_0000000002.tmp")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_corruption_detected(tmp_path, params):
+    p = save_checkpoint(str(tmp_path), 1, params)
+    man = json.load(open(os.path.join(p, "MANIFEST.json")))
+    victim = os.path.join(p, man["leaves"][0]["file"])
+    blob = bytearray(open(victim, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(victim, "wb").write(bytes(blob))
+    with pytest.raises(IOError, match="checksum"):
+        load_checkpoint(p, params)
+
+
+def test_manager_retention_and_restore(tmp_path, params):
+    mgr = CheckpointManager(str(tmp_path), every_steps=1, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(s, params, {"s": s})
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2
+    restored, extra, step = mgr.restore_latest(params)
+    assert step == 4 and extra == {"s": 4}
+
+
+def test_elastic_restore_new_sharding(tmp_path, params):
+    """Checkpoints are unsharded: restore onto any mesh (here: 1 device)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    p = save_checkpoint(str(tmp_path), 1, params)
+    restored, _ = load_checkpoint(p, params)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sharded = jax.device_put(
+        restored, NamedSharding(mesh, P())
+    )
+    assert all(a.shape == b.shape for a, b in zip(
+        jax.tree.leaves(sharded), jax.tree.leaves(params)))
+
+
+# ---------------------------------------------------------- fault tolerance
+def test_straggler_detector():
+    det = StragglerDetector(n_hosts=4, warmup_steps=3)
+    for step in range(10):
+        for h in range(4):
+            det.record(h, 1.0 if h != 2 else 3.5)
+    assert det.exclusion_list() == [2]
+    assert det.healthy_hosts() == [0, 1, 3]
+
+
+def test_supervisor_recovers_and_is_exactly_once(tmp_path):
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=2)
+    seen = []
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 7:
+            raise SimulatedFailure("preempted")
+        seen.append(int(batch["tokens"][0, 0]))
+        return state + 1, {}
+
+    sup = TrainSupervisor(
+        step_fn, ShardedLoader(cfg), CheckpointManager(str(tmp_path), every_steps=2),
+        max_restarts=2,
+    )
+    state, step = sup.run(jnp.int32(0), 8)
+    assert step == 8 and int(state) == 8 and sup.restarts == 1
+    # the replayed batch after restart equals the lost one (deterministic)
+    loader = ShardedLoader(cfg)
+    expected = [int(loader.batch_at(s)["tokens"][0, 0]) for s in range(8)]
+    # seen may contain a duplicate of the failed step's predecessor region;
+    # final sequence must end aligned with steps 0..7
+    assert seen[-3:] == expected[-3:]
+
+
+def test_supervisor_gives_up(tmp_path):
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=2)
+
+    def step_fn(state, batch):
+        raise SimulatedFailure("dead host")
+
+    sup = TrainSupervisor(
+        step_fn, ShardedLoader(cfg), CheckpointManager(str(tmp_path)), max_restarts=1
+    )
+    with pytest.raises(SimulatedFailure):
+        sup.run(jnp.int32(0), 4)

@@ -1,0 +1,91 @@
+"""Block store: exact round-trips, partial fetch, ratio orderings."""
+
+import dataclasses
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core.bitplane import BF16, SPECS
+from repro.core.compressed_store import (
+    StoreConfig,
+    compress_kv,
+    compress_weights,
+    decompress_kv,
+    decompress_weights,
+)
+from repro.core.controller import MemoryController
+from repro.core.quantization import truncate_uint
+from repro.core.surrogates import gaussian_weights, logmag_kv_cache
+
+
+@pytest.mark.parametrize("codec", ["zstd", "lz4"])
+@pytest.mark.parametrize("layout", ["bitplane", "raw"])
+def test_weights_roundtrip_exact(codec, layout, rng):
+    w = gaussian_weights((300, 70), seed=3)
+    cfg = StoreConfig(codec=codec, layout=layout)
+    ct = compress_weights(w, BF16, cfg)
+    back = decompress_weights(ct)
+    np.testing.assert_array_equal(
+        back.view(np.uint16), w.view(np.uint16)
+    )
+
+
+@pytest.mark.parametrize("kv_cluster", [True, False])
+def test_kv_roundtrip_exact(kv_cluster, rng):
+    kv = logmag_kv_cache(130, 65, seed=2)  # non-multiple token count
+    cfg = StoreConfig(kv_cluster=kv_cluster)
+    ct = compress_kv(kv, BF16, cfg)
+    back = decompress_kv(ct)
+    np.testing.assert_array_equal(back.view(np.uint16), kv.view(np.uint16))
+
+
+def test_partial_fetch_equals_truncation(rng):
+    w = gaussian_weights((128, 64), seed=5)
+    ct = compress_weights(w, BF16)
+    u = w.view(np.uint16).reshape(-1)
+    for keep in (12, 8, 4):
+        got = decompress_weights(ct, keep_planes=keep).view(np.uint16).reshape(-1)
+        want = truncate_uint(u, keep, BF16, round_nearest=False)
+        np.testing.assert_array_equal(got, want)
+        assert ct.fetch_bytes(keep) < ct.stored_bytes
+
+
+def test_bitplane_beats_raw_on_weights():
+    w = gaussian_weights((512, 512), seed=7)
+    r_plane = compress_weights(w, BF16, StoreConfig(layout="bitplane")).ratio
+    r_raw = compress_weights(w, BF16, StoreConfig(layout="raw")).ratio
+    assert r_plane > r_raw > 0.95
+
+
+def test_clustering_beats_plain_bitplane_on_kv():
+    kv = logmag_kv_cache(1024, 256, rho=0.998, seed=11)
+    base = compress_kv(kv, BF16, StoreConfig(kv_cluster=False)).ratio
+    clus = compress_kv(kv, BF16, StoreConfig(kv_cluster=True)).ratio
+    # paper Fig. 7: clustering+delta lifts the ratio well beyond bit-planes
+    # alone; the magnitude depends on cross-token correlation (benchmarked
+    # with calibrated surrogates in benchmarks/fig7) — structurally >10% here
+    assert clus > base * 1.1, (clus, base)
+
+
+def test_plane_byte_accounting():
+    w = gaussian_weights((256, 128), seed=13)
+    ct = compress_weights(w, BF16)
+    per_plane = ct.plane_stored_bytes()
+    assert per_plane.shape == (16,)
+    assert per_plane.sum() == ct.stored_bytes
+    # exponent planes (1..8) compress much better than mantissa tail planes
+    assert per_plane[1:5].mean() < 0.7 * per_plane[12:].mean()
+
+
+def test_controller_accounting():
+    mc = MemoryController(StoreConfig())
+    w = gaussian_weights((128, 256), seed=17)
+    mc.write_weights("w0", w, BF16)
+    full = mc.read_weights("w0")
+    np.testing.assert_array_equal(full.view(np.uint16), w.view(np.uint16))
+    mc.read_weights("w0", planes=8)
+    reads = mc.stats.reads()
+    assert reads[1].physical_bytes < reads[0].physical_bytes
+    fp = mc.footprint()
+    assert 0.0 < fp["weights_saving"] < 0.9

@@ -1,0 +1,101 @@
+"""Trip-count-aware HLO analysis: verified against hand-built programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import hlo_analysis as H
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    n_steps, d = 8, 256
+
+    def one(x, w):
+        return x @ w
+
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    ws = jax.ShapeDtypeStruct((n_steps, d, d), jnp.float32)
+    c1 = H.analyse_hlo(_compile(one, x, w).as_text())
+    c8 = H.analyse_hlo(_compile(scanned, x, ws).as_text())
+    expect_one = 2 * d**3
+    assert c1.flops == pytest.approx(expect_one, rel=0.01)
+    assert c8.flops == pytest.approx(n_steps * expect_one, rel=0.01)
+
+
+def test_scan_bytes_count_slices_not_stacks():
+    """Per-iteration weight fetch counts the slice, not the full stack."""
+    n_steps, d = 16, 128
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    ws = jax.ShapeDtypeStruct((n_steps, d, d), jnp.float32)
+    cost = H.analyse_hlo(_compile(scanned, x, ws).as_text())
+    stack_bytes = n_steps * d * d * 4
+    slice_bytes = d * d * 4
+    # Per iteration: dot reads x+w and writes out, tanh reads+writes —
+    # ~6 slice-sized transfers.  The naive accounting (full stack operand
+    # per iteration) would be ≥ steps × stack = 16 MB; assert we stay an
+    # order of magnitude under that and within the per-slice model.
+    assert stack_bytes < cost.hbm_bytes < 10 * n_steps * slice_bytes
+
+
+def test_collective_parse_ring_model():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[512,256]{1,0} all-gather(%all-reduce.1), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %out = f32[128,256]{1,0} slice(%ag), slice={[0:128], [0:256]}
+}
+"""
+    cost = H.analyse_hlo(hlo)
+    size_ar = 128 * 256 * 4
+    size_ag = 512 * 256 * 4
+    want = 2 * size_ar * 3 / 4 + size_ag * 3 / 4
+    assert cost.collective_link_bytes == pytest.approx(want)
+    assert cost.collectives_by_op["all-reduce"][0] == 1
+
+
+def test_vmem_scope_discounted():
+    def f(q, k):
+        with jax.named_scope("flash_vmem"):
+            s = q @ k.T
+            p = jnp.exp(s - s.max())
+        return p.sum()
+
+    q = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+    k = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+    cost = H.analyse_hlo(_compile(f, q, k).as_text())
+    assert cost.vmem_discounted_bytes > 0
+    # flops still counted (the MXU does execute inside the kernel)
+    assert cost.flops >= 2 * 256 * 256 * 128
+
+
+def test_roofline_terms():
+    r = H.Roofline(
+        name="x", n_devices=256,
+        hlo_flops=197e12, hlo_bytes=819e9, collective_link_bytes=100e9,
+        model_flops=197e12 * 256 * 0.5,
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(2.0)
+    assert r.bottleneck == "collective"
+    assert r.mfu_bound == pytest.approx(0.25)

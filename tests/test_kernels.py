@@ -1,0 +1,195 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp ref oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core.bitplane import BF16, FP8_E4M3, disaggregate_np, reaggregate_np
+
+
+def _bf16(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(ml_dtypes.bfloat16))
+
+
+# ---------------------------------------------------------------- bitplane
+class TestBitplaneKernel:
+    @pytest.mark.parametrize("bits,nblocks", [(16, 1), (16, 3), (8, 2), (32, 1)])
+    def test_pack_matches_numpy(self, bits, nblocks, rng):
+        from repro.kernels.bitplane import kernel as K
+
+        m = 8 * 4096 * nblocks
+        u = rng.integers(0, 2**min(bits, 31), m).astype(np.uint32)
+        got = np.asarray(K.pack(jnp.asarray(u), bits))
+        dt = np.uint8 if bits == 8 else (np.uint16 if bits == 16 else np.uint32)
+        want = disaggregate_np(u.astype(dt), bits)
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("keep", [16, 12, 8, 3, 1])
+    def test_unpack_partial(self, keep, rng):
+        from repro.kernels.bitplane import kernel as K
+
+        u = rng.integers(0, 2**16, 8 * 4096).astype(np.uint32)
+        planes = K.pack(jnp.asarray(u), 16)
+        got = np.asarray(K.unpack(planes, 16, keep))
+        want = reaggregate_np(np.asarray(planes), 16, keep)
+        np.testing.assert_array_equal(got.astype(np.uint16), want)
+
+    def test_ops_value_roundtrip(self, rng):
+        from repro.kernels.bitplane import ops
+
+        for spec, dt in ((BF16, ml_dtypes.bfloat16), (FP8_E4M3, ml_dtypes.float8_e4m3fn)):
+            x = jnp.asarray(rng.normal(0, 0.1, (777,)).astype(dt))
+            planes, n = ops.pack(x, spec)
+            back = ops.unpack(planes, spec, x.shape)
+            np.testing.assert_array_equal(
+                np.asarray(back).view(np.uint8), np.asarray(x).view(np.uint8)
+            )
+
+
+# ---------------------------------------------------------------- exp_delta
+class TestExpDeltaKernel:
+    @pytest.mark.parametrize("spec", [BF16, FP8_E4M3])
+    @pytest.mark.parametrize("c,g", [(256, 16), (300, 8), (64, 4)])
+    def test_matches_ref_and_roundtrips(self, spec, c, g, rng):
+        from repro.kernels.exp_delta import ops
+        from repro.kernels.exp_delta.ref import encode_ref
+
+        u = jnp.asarray(
+            rng.integers(0, 2**spec.bits, (c, g)).astype(np.uint32)
+        )
+        enc, base = ops.encode(u, spec)
+        enc_r, base_r = encode_ref(u, spec)
+        np.testing.assert_array_equal(np.asarray(enc), np.asarray(enc_r))
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(base_r).astype(np.uint8))
+        dec = ops.decode(enc, base, spec)
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(u))
+
+
+# ----------------------------------------------------------- bitplane_matmul
+class TestBitplaneMatmul:
+    @pytest.mark.parametrize("keep", [16, 8, 4])
+    @pytest.mark.parametrize("m,k,n", [(32, 512, 256), (100, 1024, 512)])
+    def test_matches_ref(self, keep, m, k, n, rng):
+        from repro.kernels.bitplane_matmul import ops
+        from repro.kernels.bitplane_matmul.ref import bitplane_matmul_ref
+
+        x = _bf16(rng, m, k)
+        w = _bf16(rng, k, n, scale=0.02)
+        planes = ops.pack_weights(w)
+        got = ops.bitplane_matmul(x, planes, keep=keep)
+        want = bitplane_matmul_ref(x, planes, keep)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+    def test_fetch_bytes_proportional(self, rng):
+        from repro.kernels.bitplane_matmul import ops
+
+        planes = ops.pack_weights(_bf16(rng, 512, 256))
+        full = ops.weight_fetch_bytes(planes, 16)
+        assert ops.weight_fetch_bytes(planes, 8) == full // 2
+        assert ops.weight_fetch_bytes(planes, 4) == full // 4
+
+
+# ------------------------------------------------------------ flash_attention
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "b,sq,skv,hp,hkv,hd,causal,window",
+        [
+            (2, 128, 128, 8, 2, 64, True, 0),
+            (1, 256, 256, 4, 4, 128, True, 64),
+            (2, 64, 192, 6, 3, 32, False, 0),
+            (1, 96, 96, 9, 3, 112, True, 0),
+        ],
+    )
+    def test_matches_naive_ref(self, b, sq, skv, hp, hkv, hd, causal, window, rng):
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.flash_attention.ref import attention_ref
+
+        q, k, v = _bf16(rng, b, sq, hp, hd), _bf16(rng, b, skv, hkv, hd), _bf16(rng, b, skv, hkv, hd)
+        got = flash_attention(q, k, v, causal=causal, window=window, bq=64, bkv=64)
+        want = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=0.06
+        )
+
+    def test_model_flash_vjp_matches_ref_grads(self, rng):
+        """The model's custom-VJP flash backward == autodiff of naive attn."""
+        from repro.kernels.flash_attention.ref import attention_ref
+        from repro.models.attention import flash_attention, head_map_static
+
+        B, S, Hp, Hkv, hd = 2, 64, 4, 2, 32
+        q = jnp.asarray(rng.normal(0, 0.5, (B, S, Hp, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(0, 0.5, (B, S, Hkv, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(0, 0.5, (B, S, Hkv, hd)).astype(np.float32))
+        hm = head_map_static(Hp, Hp, Hkv)
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def f1(q, k, v):
+            return jnp.sum(jnp.sin(flash_attention(
+                q, k, v, hm, q_pos=pos, kv_valid=S, chunk=16
+            ).astype(jnp.float32)))
+
+        def f2(q, k, v):
+            return jnp.sum(jnp.sin(attention_ref(q, k, v, causal=True).astype(jnp.float32)))
+
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
+
+
+# ------------------------------------------------------------ paged_attention
+class TestPagedAttention:
+    @pytest.mark.parametrize(
+        "ladder,valid",
+        [
+            (((0, 512, 16),), 512),
+            (((0, 128, 16), (128, 384, 8), (384, 512, 4)), 512),
+            (((0, 256, 16), (256, 512, 8)), 400),
+        ],
+    )
+    def test_ladder_matches_ref(self, ladder, valid, rng):
+        from repro.kernels.paged_attention.ops import (
+            kv_fetch_bytes,
+            ladder_paged_attention,
+            pack_kv_planes,
+        )
+        from repro.kernels.paged_attention.ref import ladder_attention_ref
+
+        B, S, Hkv, rep, hd = 2, 512, 4, 2, 64
+        q = _bf16(rng, B, 1, Hkv * rep, hd)
+        k = _bf16(rng, B, S, Hkv, hd)
+        v = _bf16(rng, B, S, Hkv, hd)
+        kp, vp = pack_kv_planes(k), pack_kv_planes(v)
+        got = ladder_paged_attention(q, kp, vp, ladder, valid)
+        want = ladder_attention_ref(q, kp, vp, ladder, valid)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=0.06
+        )
+        full = 2 * B * S * Hkv * hd * 2
+        assert kv_fetch_bytes(kp, ladder) <= full
+
+
+# ------------------------------------------------------------------- ssd
+class TestSSDKernel:
+    @pytest.mark.parametrize("chunk", [64, 128])
+    @pytest.mark.parametrize("l", [256, 192])
+    def test_matches_ssd_scan(self, chunk, l, rng):
+        from repro.kernels.ssd.ops import ssd
+        from repro.kernels.ssd.ref import ssd_ref
+
+        B, H, P, N = 2, 4, 32, 16
+        xdt = jnp.asarray(rng.normal(0, 1, (B, l, H, P)).astype(np.float32))
+        da = jnp.asarray(-np.abs(rng.normal(0.05, 0.05, (B, l, H))).astype(np.float32))
+        b_h = jnp.asarray(rng.normal(0, 1, (B, l, H, N)).astype(np.float32))
+        c_h = jnp.asarray(rng.normal(0, 1, (B, l, H, N)).astype(np.float32))
+        h0 = jnp.asarray(rng.normal(0, 1, (B, H, N, P)).astype(np.float32))
+        y_k, h_k = ssd(xdt, da, b_h, c_h, h0=h0, chunk=chunk)
+        # ref math is chunking-invariant; 64 divides every tested length
+        y_r, h_r = ssd_ref(xdt, da, b_h, c_h, h0=h0, chunk=64)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-3)

@@ -1,0 +1,72 @@
+"""DRAMSim3-lite + Table IV hardware model."""
+
+import numpy as np
+import pytest
+
+from repro.core.controller import AccessEvent
+from repro.memsim.dram import DDR5Config, DramSystem
+from repro.memsim.hardware import PAPER_POINTS, CompressionEngineModel
+from repro.memsim.trace import replay_controller_trace, synthetic_weight_trace
+
+
+def test_sequential_stream_efficiency():
+    sys_ = DramSystem()
+    t = sys_.stream_access(1 << 26)  # 64 MB
+    achieved = (1 << 26) / t
+    assert achieved > 0.85 * sys_.peak_bw_gbps
+
+
+def test_latency_monotone_in_bytes():
+    times = []
+    for nbytes in (1 << 20, 4 << 20, 16 << 20):
+        times.append(DramSystem().stream_access(nbytes))
+    assert times[0] < times[1] < times[2]
+
+
+def test_row_misses_cost_more():
+    seq = DramSystem()
+    t_seq = seq.stream_access(8 << 20, sequential=True)
+    rnd = DramSystem()
+    total = 0
+    for _ in range(128):
+        total = rnd.stream_access(64 << 10, sequential=False)
+    assert rnd.stats()["row_misses"] > seq.stats()["row_misses"]
+
+
+def test_compressed_trace_faster_and_cheaper():
+    layers = [8 << 20] * 16
+    trad = replay_controller_trace(synthetic_weight_trace(layers))
+    comp = replay_controller_trace(
+        synthetic_weight_trace([int(b * 0.748) for b in layers])
+    )
+    lat_red = 1 - comp.elapsed_ns / trad.elapsed_ns
+    en_red = 1 - comp.energy["total_uj"] / trad.energy["total_uj"]
+    assert 0.20 < lat_red < 0.30
+    assert 0.18 < en_red < 0.30
+
+
+def test_partial_plane_fetch_scales_bandwidth():
+    full = replay_controller_trace(
+        [AccessEvent("weight_read", "w", 100 << 20, 100 << 20)]
+    )
+    half = replay_controller_trace(
+        [AccessEvent("weight_read", "w", 100 << 20, 50 << 20, planes=8)]
+    )
+    assert half.elapsed_ns < 0.6 * full.elapsed_ns
+
+
+def test_table4_model_fit():
+    for (eng, bb), (area, power) in PAPER_POINTS.items():
+        m = CompressionEngineModel(eng)
+        fit = m.single_lane(bb)
+        assert abs(fit["area_mm2"] - area) / area < 0.15
+        assert abs(fit["power_mw"] - power) / power < 0.15
+        assert m.paper_total(bb)["agg_thpt_tbs"] == pytest.approx(2.048)
+
+
+def test_engine_sustains_serving_bandwidth():
+    m = CompressionEngineModel("zstd")
+    assert m.sustains_bandwidth(demand_gbps=1800, block_bits=32768)
+    assert not CompressionEngineModel("zstd", lanes=2).sustains_bandwidth(
+        demand_gbps=1800, block_bits=32768
+    )

@@ -1,0 +1,153 @@
+"""Architecture smoke + consistency tests (all ten assigned archs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.model import build_model, demo_batch, prepare_decode_cache
+
+SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch, rng_key):
+    """Reduced config: one forward/loss + grad step, finite outputs."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    batch = demo_batch(cfg, rng_key, 2, SEQ)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_consistency(arch, rng_key):
+    """decode(prefill(prompt[:-1]), prompt[-1]) logits == prefill(prompt)."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    batch = demo_batch(cfg, rng_key, 2, SEQ)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    full_logits, _ = jax.jit(model.prefill)(params, pre)
+
+    shorter = dict(pre)
+    shorter["tokens"] = pre["tokens"][:, :-1]
+    logits_s, cache = jax.jit(model.prefill)(params, shorter)
+    max_len = SEQ + 4 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    cache = prepare_decode_cache(cfg, cache, max_len)
+    step_logits, _ = jax.jit(model.decode)(params, pre["tokens"][:, -1], cache)
+
+    a = np.asarray(full_logits, np.float32)
+    b = np.asarray(step_logits, np.float32)
+    mask = a > -1e29  # skip padded-vocab entries
+    np.testing.assert_allclose(a[mask], b[mask], atol=0.05, rtol=0.02)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """Chunked SSD == token-by-token linear recurrence (arXiv:2405.21060)."""
+    from repro.models.ssm import ssd_scan
+
+    rng = np.random.default_rng(9)
+    B, L, H, P, N = 1, 64, 2, 8, 4
+    xdt = jnp.asarray(rng.normal(0, 1, (B, L, H, P)).astype(np.float32))
+    da = jnp.asarray(-np.abs(rng.normal(0.1, 0.05, (B, L, H))).astype(np.float32))
+    b_h = jnp.asarray(rng.normal(0, 1, (B, L, H, N)).astype(np.float32))
+    c_h = jnp.asarray(rng.normal(0, 1, (B, L, H, N)).astype(np.float32))
+    y, h_final = ssd_scan(xdt, da, b_h, c_h, chunk=16)
+
+    state = np.zeros((B, H, N, P), np.float32)
+    ys = np.zeros((B, L, H, P), np.float32)
+    for t in range(L):
+        decay = np.exp(np.asarray(da)[:, t])  # (B,H)
+        state = state * decay[:, :, None, None] + np.einsum(
+            "bhn,bhp->bhnp", np.asarray(b_h)[:, t], np.asarray(xdt)[:, t]
+        )
+        ys[:, t] = np.einsum("bhn,bhnp->bhp", np.asarray(c_h)[:, t], state)
+    np.testing.assert_allclose(np.asarray(y), ys, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_final), state, atol=2e-3)
+
+
+def test_mixtral_ring_cache_matches_full_window():
+    """SWA ring-buffer decode == decode with a full-length cache."""
+    cfg = get_config("mixtral-8x7b", smoke=True)  # window 64
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    prompt = jax.random.randint(key, (1, 96), 0, cfg.vocab, jnp.int32)
+
+    logits_s, cache = jax.jit(model.prefill)(params, {"tokens": prompt[:, :-1]})
+    ring = prepare_decode_cache(cfg, cache, 128)  # window < 128 -> ring
+    assert "pos" in ring and ring["k"].shape[2] == cfg.attn_window
+    got, _ = jax.jit(model.decode)(params, prompt[:, -1], ring)
+
+    full_logits, _ = jax.jit(model.prefill)(params, {"tokens": prompt})
+    a, b = np.asarray(full_logits, np.float32), np.asarray(got, np.float32)
+    mask = a > -1e29
+    np.testing.assert_allclose(a[mask], b[mask], atol=0.05, rtol=0.02)
+
+
+def test_staged_decode_cache_matches_plain():
+    """§Perf Cell-3 optimization: read-only main cache + staging ring must
+    decode identically to the plain append cache, across flush boundaries."""
+    import dataclasses
+
+    from repro.models.transformer import flush_staging
+
+    cfg0 = get_config("yi-34b", smoke=True)
+    cfg1 = dataclasses.replace(cfg0, decode_staging=8)
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    key = jax.random.PRNGKey(0)
+    params = m0.init(key)
+    prompt = jax.random.randint(key, (2, 40), 0, cfg0.vocab, jnp.int32)
+
+    logits, cache = jax.jit(m0.prefill)(params, {"tokens": prompt})
+    c0 = prepare_decode_cache(cfg0, cache, 64)
+    c1 = prepare_decode_cache(cfg1, cache, 64)
+    assert "sk" in c1 and c1["sk"].shape[2] == 8
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t0 = t1 = tok
+    d0, d1 = jax.jit(m0.decode), jax.jit(m1.decode)
+    flush = jax.jit(lambda c: flush_staging(c, cfg1))
+    for i in range(12):  # crosses the 8-slot flush boundary
+        l0, c0 = d0(params, t0, c0)
+        l1, c1 = d1(params, t1, c1)
+        t0 = jnp.argmax(l0, -1).astype(jnp.int32)
+        t1 = jnp.argmax(l1, -1).astype(jnp.int32)
+        assert jnp.array_equal(t0, t1), i
+        np.testing.assert_allclose(
+            np.asarray(l0)[np.asarray(l0) > -1e29],
+            np.asarray(l1)[np.asarray(l1) > -1e29], atol=0.08,
+        )
+        if int(c1["len"]) % 8 == 0:
+            c1 = flush(c1)
+
+
+def test_grouped_gqa_head_layout():
+    from repro.models.attention import head_map_static, valid_q_heads
+
+    hm = np.asarray(head_map_static(64, 56, 8))
+    assert hm.tolist() == [i // 8 for i in range(64)]
+    valid = valid_q_heads(64, 56, 8)
+    assert valid.sum() == 56
+    assert valid.reshape(8, 8)[:, :7].all() and not valid.reshape(8, 8)[:, 7].any()
+
+
+def test_param_count_matches_published_sizes():
+    """Analytic param_count lands near the published model sizes."""
+    expect = {
+        "yi-34b": 34.4e9, "yi-9b": 8.8e9, "nemotron-4-15b": 15.1e9,
+        "smollm-135m": 135e6, "mixtral-8x7b": 46.7e9,
+        "deepseek-moe-16b": 16.4e9, "mamba2-1.3b": 1.3e9,
+    }
+    for arch, want in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.25, (arch, got, want)

@@ -1,0 +1,84 @@
+"""Dynamic quantization: truncation semantics, ladders, router policies."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitplane import BF16
+from repro.core.quantization import (
+    BF16_LADDER,
+    PrecisionLadder,
+    RouterPolicy,
+    assign_page_precision,
+    page_minmax,
+    quest_scores,
+    truncate_uint,
+    truncate_values,
+    truncation_rmse,
+)
+
+
+@given(st.lists(st.integers(0, 2**16 - 1), min_size=8, max_size=64),
+       st.sampled_from([4, 8, 12]))
+@settings(max_examples=50, deadline=None)
+def test_truncate_never_makes_nan(vals, keep):
+    u = np.array(vals, np.uint16)
+    q = truncate_uint(u, keep, BF16, round_nearest=True)
+    exp = (q.astype(np.uint32) >> 7) & 0xFF
+    man = q.astype(np.uint32) & 0x7F
+    was_finite = ((u.astype(np.uint32) >> 7) & 0xFF) != 0xFF
+    # finite inputs stay finite (no manufactured inf/NaN)
+    assert not np.any(was_finite & (exp == 0xFF) & (man != 0))
+
+
+def test_round_nearest_reduces_error(rng):
+    x = jnp.asarray(rng.normal(0, 1, 4096).astype(ml_dtypes.bfloat16))
+    for keep in (12, 10, 8):
+        e_trunc = np.mean(
+            (np.float32(truncate_values(x, keep, BF16, round_nearest=False)) - np.float32(x)) ** 2
+        )
+        e_round = np.mean(
+            (np.float32(truncate_values(x, keep, BF16, round_nearest=True)) - np.float32(x)) ** 2
+        )
+        assert e_round <= e_trunc
+
+
+def test_rmse_monotone_in_planes(rng):
+    x = rng.normal(0, 1, 8192).astype(ml_dtypes.bfloat16)
+    errs = [truncation_rmse(x, k, BF16) for k in (16, 12, 10, 8, 6)]
+    assert errs[0] == 0.0
+    assert all(a <= b + 1e-9 for a, b in zip(errs, errs[1:]))
+
+
+def test_ladder_assignment():
+    ladder = PrecisionLadder([(5, 16), (3, 8), (2, 4)])
+    scores = jnp.asarray(np.linspace(1, 0, 12)[:, None])  # (pages, 1 head)
+    planes = assign_page_precision(scores, ladder)
+    got = list(np.asarray(planes[:, 0]))
+    assert got == [16] * 5 + [8] * 3 + [4] * 2 + [4] * 2  # rest = last rung
+
+
+def test_quest_scores_bound():
+    """quest upper bound >= every realized q.k within the page."""
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.normal(0, 1, (64, 2, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(0, 1, (2, 16)).astype(np.float32))
+    kmin, kmax = page_minmax(keys, 16)
+    scores = quest_scores(q, kmin, kmax)  # (4, 2)
+    dots = np.einsum("hd,thd->th", np.asarray(q), np.asarray(keys))
+    for p in range(4):
+        realized = dots[p * 16:(p + 1) * 16]
+        assert np.all(np.asarray(scores)[p] >= realized.max(0) - 1e-4)
+
+
+def test_router_policy_distribution():
+    pol = RouterPolicy(("bf16", "fp8", "fp4"), (0.2, 0.6))
+    scores = np.random.default_rng(0).normal(size=200)
+    dist = pol.distribution(scores)
+    assert abs(dist["bf16"] - 0.2) < 0.02
+    assert abs(dist["fp8"] - 0.4) < 0.02
+    assert abs(dist["fp4"] - 0.4) < 0.02
+    assert 4 <= pol.mean_bits(scores) <= 16
