@@ -25,6 +25,8 @@ MODULES = [
     ("fig10", "benchmarks.fig10_dram_energy", {}),
     ("fig11", "benchmarks.fig11_load_latency", {}),
     ("table4", "benchmarks.table4_hardware_cost", {}),
+    ("serving", "benchmarks.serving_throughput",
+     {"fast": dict(n_requests=8, rate=0.8)}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]

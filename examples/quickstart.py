@@ -19,7 +19,7 @@ from repro.memsim.trace import replay_controller_trace
 
 
 def main():
-    mc = MemoryController(StoreConfig(codec="zstd"))
+    mc = MemoryController(StoreConfig())  # zstd if installed, else lz4
 
     # 1. weights ------------------------------------------------------------
     w = gaussian_weights((1024, 1024), seed=0)

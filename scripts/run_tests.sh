@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 test suite, one command locally and in CI:
+#   scripts/run_tests.sh            # whole suite
+#   scripts/run_tests.sh tests/test_scheduler.py -k budget
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

@@ -62,8 +62,14 @@ def _compressible(arr: np.ndarray) -> bool:
 
 
 def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None,
-                    codec: str = "zstd") -> str:
-    """Two-phase atomic save. Returns the committed path."""
+                    codec: str | None = None) -> str:
+    """Two-phase atomic save. Returns the committed path.
+
+    ``codec=None`` picks zstd when the optional zstandard package is
+    installed, else the built-in lz4."""
+    from repro.compression import default_codec
+
+    codec = codec or default_codec()
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"

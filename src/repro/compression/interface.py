@@ -41,8 +41,11 @@ def get_codec(name: str) -> Codec:
     try:
         return _REGISTRY[name]
     except KeyError:
+        hint = ""
+        if name.startswith("zstd"):
+            hint = " (the zstd codec needs the optional 'zstandard' package)"
         raise KeyError(
-            f"unknown codec {name!r}; available: {sorted(_REGISTRY)}"
+            f"unknown codec {name!r}; available: {sorted(_REGISTRY)}{hint}"
         ) from None
 
 

@@ -2,37 +2,70 @@
 paper's tooling).  Level 3 is the zstd CLI default, which is what "ZSTD"
 means in the paper's tables unless stated otherwise; the hardware engine in
 Table IV targets comparable match-search effort.
+
+``zstandard`` is an *optional* dependency: on a bare environment the codec is
+simply not registered (``available()`` returns False) and the from-scratch
+LZ4 implementation is the default codec.  Importing this module never raises;
+using zstd without the library does, with a clear install hint.
 """
 
 from __future__ import annotations
-
-import zstandard as _zstd
 
 from repro.compression.interface import Codec, register_codec
 
 _LEVEL = 3
 
-# One compressor/decompressor pair reused across calls (thread-unsafe use is
-# fine here: the store path is single-threaded per shard).
-_CCTX = _zstd.ZstdCompressor(level=_LEVEL, write_content_size=True)
-_DCTX = _zstd.ZstdDecompressor()
+try:  # optional dependency — keep repro.core importable on bare environments
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - exercised on bare CI images
+    _zstd = None
 
 
-def compress(data: bytes) -> bytes:
-    return _CCTX.compress(data)
+def available() -> bool:
+    """True when the ``zstandard`` library is importable."""
+    return _zstd is not None
 
 
-def decompress(data: bytes) -> bytes:
-    return _DCTX.decompress(data)
+def _require_zstd():
+    if _zstd is None:
+        raise ModuleNotFoundError(
+            "the 'zstd' codec requires the optional 'zstandard' package "
+            "(pip install zstandard); the built-in 'lz4' codec needs no "
+            "third-party library"
+        )
+    return _zstd
 
 
-CODEC = register_codec(Codec(name="zstd", compress=compress, decompress=decompress, engine="zstd"))
+if _zstd is not None:
+    # One compressor/decompressor pair reused across calls (thread-unsafe use
+    # is fine here: the store path is single-threaded per shard).
+    _CCTX = _zstd.ZstdCompressor(level=_LEVEL, write_content_size=True)
+    _DCTX = _zstd.ZstdDecompressor()
+
+    def compress(data: bytes) -> bytes:
+        return _CCTX.compress(data)
+
+    def decompress(data: bytes) -> bytes:
+        return _DCTX.decompress(data)
+
+    CODEC = register_codec(
+        Codec(name="zstd", compress=compress, decompress=decompress, engine="zstd")
+    )
+else:
+    def compress(data: bytes) -> bytes:  # noqa: ARG001 - signature parity
+        _require_zstd()
+
+    def decompress(data: bytes) -> bytes:  # noqa: ARG001 - signature parity
+        _require_zstd()
+
+    CODEC = None
 
 
 def make_level_codec(level: int) -> Codec:
     """Non-default-level ZSTD codec (used by ablation benchmarks)."""
-    cctx = _zstd.ZstdCompressor(level=level, write_content_size=True)
-    dctx = _zstd.ZstdDecompressor()
+    z = _require_zstd()
+    cctx = z.ZstdCompressor(level=level, write_content_size=True)
+    dctx = z.ZstdDecompressor()
     return Codec(
         name=f"zstd{level}",
         compress=cctx.compress,

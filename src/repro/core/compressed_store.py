@@ -20,7 +20,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.compression import get_codec
+from repro.compression import default_codec, get_codec
 from repro.core import kv_clustering
 from repro.core.bitplane import (
     FloatSpec,
@@ -35,7 +35,8 @@ from repro.core.quantization import truncate_uint
 
 @dataclasses.dataclass(frozen=True)
 class StoreConfig:
-    codec: str = "zstd"
+    # zstd when the optional zstandard package is present, else built-in lz4
+    codec: str = dataclasses.field(default_factory=default_codec)
     block_bytes: int = 4096  # compressed-block granularity (paper: 2/4 KB)
     layout: str = "bitplane"  # 'bitplane' (proposed) or 'raw' (baseline)
     kv_cluster: bool = True  # channel-wise grouping (Fig. 6 ①); False = paper's

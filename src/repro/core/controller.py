@@ -42,18 +42,38 @@ class AccessEvent:
 
 @dataclasses.dataclass
 class ControllerStats:
+    """Access log + O(1) running totals.
+
+    ``retain_events=False`` keeps only the totals — the serving scheduler
+    logs one event per resident page per decode step, which would grow the
+    list without bound on long runs; the DRAM-trace replay path needs the
+    full event list and leaves retention on (the default)."""
+
     events: List[AccessEvent] = dataclasses.field(default_factory=list)
+    retain_events: bool = True
+    # kind -> [logical_bytes, physical_bytes, count]
+    totals: Dict[str, list] = dataclasses.field(default_factory=dict)
 
     def log(self, ev: AccessEvent):
-        self.events.append(ev)
+        t = self.totals.setdefault(ev.kind, [0, 0, 0])
+        t[0] += ev.logical_bytes
+        t[1] += ev.physical_bytes
+        t[2] += 1
+        if self.retain_events:
+            self.events.append(ev)
+
+    def kind_bytes(self, kind: str) -> tuple:
+        """(logical, physical) running totals for one event kind."""
+        t = self.totals.get(kind, (0, 0, 0))
+        return t[0], t[1]
 
     @property
     def logical_bytes(self) -> int:
-        return sum(e.logical_bytes for e in self.events)
+        return sum(t[0] for t in self.totals.values())
 
     @property
     def physical_bytes(self) -> int:
-        return sum(e.physical_bytes for e in self.events)
+        return sum(t[1] for t in self.totals.values())
 
     @property
     def bandwidth_saving(self) -> float:
@@ -67,11 +87,12 @@ class ControllerStats:
 class MemoryController:
     """Functional model of the compression-aware controller."""
 
-    def __init__(self, config: StoreConfig | None = None):
+    def __init__(self, config: StoreConfig | None = None,
+                 retain_events: bool = True):
         self.config = config or StoreConfig()
         self._weights: Dict[str, CompressedTensor] = {}
         self._kv_pages: Dict[tuple, CompressedTensor] = {}
-        self.stats = ControllerStats()
+        self.stats = ControllerStats(retain_events=retain_events)
 
     # -------------------------------------------------------------- weights
     def write_weights(self, name: str, arr: np.ndarray, spec: FloatSpec) -> CompressedTensor:
@@ -102,11 +123,34 @@ class MemoryController:
         )
         return ct
 
-    def read_kv_page(self, key: tuple, planes: int | None = None) -> np.ndarray:
+    def _log_kv_read(self, key: tuple, planes: int | None) -> tuple:
         ct = self._kv_pages[key]
         fetched = ct.fetch_bytes(planes)
         self.stats.log(AccessEvent("kv_read", str(key), ct.logical_bytes, fetched, planes))
+        return ct, fetched
+
+    def read_kv_page(self, key: tuple, planes: int | None = None) -> np.ndarray:
+        ct, _ = self._log_kv_read(key, planes)
         return decompress_kv(ct, planes)
+
+    def account_kv_read(self, key: tuple, planes: int | None = None) -> int:
+        """Log a KV page read without decompressing (bandwidth modeling for
+        reads whose *values* are already resident in the device working set —
+        the serving scheduler's steady-state decode fetches).  Returns the
+        physical bytes the bus would move."""
+        return self._log_kv_read(key, planes)[1]
+
+    def has_kv_page(self, key: tuple) -> bool:
+        return key in self._kv_pages
+
+    def kv_page(self, key: tuple) -> CompressedTensor:
+        return self._kv_pages[key]
+
+    def drop_kv_page(self, key: tuple) -> CompressedTensor | None:
+        """Remove a page (capacity eviction or sequence retirement).  No
+        access event: dropping a compressed page moves no DRAM-bus bytes —
+        the cost model charges the *re-write* if the page ever returns."""
+        return self._kv_pages.pop(key, None)
 
     # ------------------------------------------------------------ accounting
     def footprint(self) -> dict:

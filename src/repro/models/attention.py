@@ -145,6 +145,8 @@ def _flash_bwd(window, bidirectional, chunk, res, dout):
         kc = jnp.moveaxis(kp.reshape(B, n_chunks, ck, hkv, hd), 1, 0)
         vc = jnp.moveaxis(vp.reshape(B, n_chunks, ck, hkv, hd), 1, 0)
         scale = 1.0 / np.sqrt(hd)
+        # scan partial-eval can hand constant residuals back as Python ints
+        kv_valid = jnp.asarray(kv_valid)
         if kv_valid.ndim == 0:
             kv_valid = jnp.broadcast_to(kv_valid, (B,))
         # delta_i = sum_d do_i o_i  (B, Hp, Sq)
@@ -453,6 +455,21 @@ def attn_apply(
             window=window, bidirectional=bidirectional, kv_pos=cpos,
         )
         new_cache = (ck, cv, cpos)
+    elif getattr(cache_len, "ndim", 0) == 1:
+        # Continuous batching: per-sequence cache lengths (B,).  Each batch
+        # row appends its token at its own slot; kv_valid is per-row, so
+        # retired/empty slots simply mask to nothing.  Decode (S == 1) only.
+        assert x.shape[1] == 1, "per-slot cache lengths are a decode-only path"
+        ck, cv = cache
+        rows = jnp.arange(ck.shape[0])
+        slot = jnp.clip(cache_len, 0, ck.shape[1] - 1)
+        ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+        out = decode_attention(
+            q, ck, cv, q_pos=pos, kv_valid=cache_len + 1,
+            window=window, bidirectional=bidirectional,
+        )
+        new_cache = (ck, cv)
     else:
         ck, cv = cache
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))

@@ -237,10 +237,18 @@ def lm_prefill(params, cfg, batch):
 def lm_decode(params, cfg, token, cache):
     """token: (B,) int32; cache from prefill or init_decode_cache.
 
+    ``cache["len"]`` may be a scalar (aligned batch) or a (B,) vector of
+    per-sequence lengths (continuous batching — each slot decodes at its own
+    position against its own valid prefix).
+
     Returns (logits (B, Vpad), new cache).
     """
     x = embed_apply(params["embed"], token[:, None])
-    pos = jnp.broadcast_to(cache["len"], (x.shape[0], 1)).astype(jnp.int32)
+    ln = jnp.asarray(cache["len"], jnp.int32)
+    if ln.ndim == 1:
+        pos = ln[:, None]
+    else:
+        pos = jnp.broadcast_to(ln, (x.shape[0], 1)).astype(jnp.int32)
     x, new_cache, _ = run_stack(params, cfg, x, pos, cache=cache, remat=False)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, head_weight(params))[:, 0]

@@ -1,6 +1,7 @@
-"""Serving stack: compressed paged KV store, sampler, batched engine with
-context-dependent dynamic quantization (the paper's inference deployment)."""
+"""Serving stack: compressed paged KV store, sampler, continuous-batching
+scheduler with compressed-KV eviction (the paper's inference deployment)."""
 
-from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
-from repro.serving.kv_cache import CompressedKVStore  # noqa: F401
+from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.kv_cache import CompressedKVStore, PageEvictedError  # noqa: F401
 from repro.serving.sampler import SamplerConfig, sample  # noqa: F401
+from repro.serving.scheduler import ContinuousScheduler  # noqa: F401

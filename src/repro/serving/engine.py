@@ -1,157 +1,58 @@
-"""Batched serving engine with compression-aware memory management.
+"""Serving engine: compatibility wrapper over the continuous-batching
+scheduler.
 
-Request lifecycle: admit -> prefill (jit) -> decode loop (jit per step) ->
-finish.  Between prefill and decode the engine:
+The original engine ran one synchronous batch (pad to the longest prompt,
+decode everyone to the longest ``max_new_tokens``).  The serving loop now
+lives in :mod:`repro.serving.scheduler` — an admission queue, per-step slot
+map and in-flight join/retire, with compressed-KV eviction under a byte
+budget.  ``ServingEngine.run()`` keeps the old call shape as a thin
+submit + drain wrapper so existing callers (tests, examples, benchmarks)
+keep working; new callers should drive the scheduler directly:
 
-  1. writes every sequence's prefill KV through the **compressed paged
-     store** (capacity savings, reported live);
-  2. scores pages Quest-style against the running query and assigns a
-     **precision ladder** (paper Table II), so decode fetches fewer planes
-     for cold pages — the controller stats account the bandwidth saved
-     exactly as the enhanced memory controller would.
-
-The decode math runs on the (device) cache; the ladder's effect on
-*quality* is what benchmarks/table2 measures; its effect on *bytes* is
-accounted here through :class:`repro.core.controller.MemoryController`
-semantics (fetch_bytes of partial-plane reads).
+    eng = ServingEngine(model, params, EngineConfig(...))
+    eng.scheduler.submit(Request(...))   # any time, any step
+    eng.scheduler.step()                 # admit -> decode -> retire
+    eng.report()                         # steady-state accounting
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+from typing import List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.models.model import Model
+from repro.serving.scheduler import ContinuousScheduler, EngineConfig, Request
 
-from repro.core.quantization import PrecisionLadder, assign_page_precision, page_minmax, quest_scores
-from repro.models.model import Model, prepare_decode_cache
-from repro.serving.kv_cache import PAGE_TOKENS, CompressedKVStore
-from repro.serving.sampler import SamplerConfig, sample
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 32
-    output: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    max_batch: int = 8
-    max_ctx: int = 512
-    sampler: SamplerConfig = SamplerConfig()
-    ladder: Optional[PrecisionLadder] = None  # None = full precision
-    store_kv_compressed: bool = True
+__all__ = ["EngineConfig", "Request", "ServingEngine"]
 
 
 class ServingEngine:
-    """Synchronous batched engine (one prefill + decode loop per batch)."""
+    """Thin facade: one scheduler, optional one-shot ``run()`` compat path."""
 
     def __init__(self, model: Model, params, cfg: EngineConfig):
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.store = CompressedKVStore()
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode)
-        self.stats: Dict[str, float] = {
-            "prefill_tokens": 0, "decode_tokens": 0,
-            "kv_logical_bytes": 0, "kv_stored_bytes": 0,
-            "kv_fetch_logical": 0, "kv_fetch_physical": 0,
-            "prefill_s": 0.0, "decode_s": 0.0,
-        }
+        self.scheduler = ContinuousScheduler(model, params, cfg)
 
-    # ------------------------------------------------------------------
-    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
-        s = max(len(r.prompt) for r in reqs)
-        s = -(-s // PAGE_TOKENS) * PAGE_TOKENS  # page-align
-        out = np.zeros((len(reqs), s), np.int32)
-        for i, r in enumerate(reqs):
-            out[i, s - len(r.prompt):] = r.prompt  # left-pad
-        return out
+    @property
+    def store(self):
+        return self.scheduler.store
+
+    @property
+    def stats(self):
+        return self.scheduler.stats
 
     def run(self, reqs: List[Request], rng_seed: int = 0) -> List[Request]:
-        """Prefill + decode a batch of requests to completion."""
+        """Submit a batch and drain the scheduler (legacy one-shot shape).
+
+        Unlike the seed engine, short requests retire at their own step and
+        free their slot + pages immediately; the return order is the input
+        order, all requests done."""
         assert len(reqs) <= self.cfg.max_batch
-        cfgm = self.model.cfg
-        tokens = self._pad_prompts(reqs)
-        b, s = tokens.shape
-        key = jax.random.PRNGKey(rng_seed)
-
-        t0 = time.time()
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
-        logits = jax.block_until_ready(logits)
-        self.stats["prefill_s"] += time.time() - t0
-        self.stats["prefill_tokens"] += b * s
-
-        # ---- compressed paged store write (capacity accounting) ----------
-        if self.cfg.store_kv_compressed and "k" in cache:
-            k_np = np.asarray(cache["k"], dtype=np.float32)  # (L,B,S,H,hd)
-            v_np = np.asarray(cache["v"], dtype=np.float32)
-            import ml_dtypes
-
-            for li in range(min(k_np.shape[0], 4)):  # sample layers (cost cap)
-                for bi, r in enumerate(reqs):
-                    flat_k = k_np[li, bi].reshape(s, -1).astype(ml_dtypes.bfloat16)
-                    flat_v = v_np[li, bi].reshape(s, -1).astype(ml_dtypes.bfloat16)
-                    self.store.put_sequence(r.rid, li, "k", flat_k)
-                    self.store.put_sequence(r.rid, li, "v", flat_v)
-            fp = self.store.footprint()
-            self.stats["kv_logical_bytes"] = fp["logical_bytes"]
-            self.stats["kv_stored_bytes"] = fp["stored_bytes"]
-
-        # ---- Quest ladder assignment (bandwidth accounting) --------------
-        ladder = self.cfg.ladder
-        if ladder is not None and "k" in cache:
-            k_last = jnp.asarray(np.asarray(cache["k"])[-1])  # (B,S,H,hd)
-            n_pages = s // PAGE_TOKENS
-            for bi in range(b):
-                kmin, kmax = page_minmax(k_last[bi], PAGE_TOKENS)
-                q_proxy = k_last[bi, -1]  # (H, hd) last-token key as proxy
-                scores = quest_scores(q_proxy, kmin, kmax)
-                planes = assign_page_precision(scores, ladder)  # (pages, H)
-                mean_planes = float(jnp.mean(planes.astype(jnp.float32)))
-                bits = 16
-                page_bytes = PAGE_TOKENS * k_last.shape[2] * k_last.shape[3] * 2
-                self.stats["kv_fetch_logical"] += 2 * n_pages * page_bytes
-                self.stats["kv_fetch_physical"] += (
-                    2 * n_pages * page_bytes * mean_planes / bits
-                )
-
-        # ---- decode loop ---------------------------------------------------
-        cache = prepare_decode_cache(cfgm, cache, self.cfg.max_ctx)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        max_new = max(r.max_new_tokens for r in reqs)
-        t0 = time.time()
-        for step in range(max_new):
-            for bi, r in enumerate(reqs):
-                if len(r.output) < r.max_new_tokens:
-                    r.output.append(int(tok[bi]))
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, tok, cache)
-            tok = sample(sub, logits, self.cfg.sampler)
-            self.stats["decode_tokens"] += b
-        jax.block_until_ready(tok)
-        self.stats["decode_s"] += time.time() - t0
-        for r in reqs:
-            r.done = True
-        for r in reqs:
-            self.store.drop_sequence(r.rid)
+        for i, r in enumerate(reqs):
+            self.scheduler.submit(r, rng_seed=rng_seed if i == 0 else None)
+        self.scheduler.run_until_drained()
         return reqs
 
-    # ------------------------------------------------------------------
     def report(self) -> dict:
-        s = dict(self.stats)
-        if s["kv_logical_bytes"]:
-            s["kv_capacity_saving"] = 1 - s["kv_stored_bytes"] / s["kv_logical_bytes"]
-        if s["kv_fetch_logical"]:
-            s["kv_bandwidth_saving"] = 1 - s["kv_fetch_physical"] / s["kv_fetch_logical"]
-        if s["decode_s"]:
-            s["decode_tok_per_s"] = s["decode_tokens"] / s["decode_s"]
-        return s
+        return self.scheduler.report()

@@ -7,19 +7,34 @@ precision = fewer planes) on re-activation.  The store runs host-side —
 the "capacity" half of the paper's claim; the "bandwidth" half lives in the
 device path (kernels/paged_attention partial-plane fetch).
 
-Accounting: every page carries its logical vs stored bytes, so the engine
-reports footprint savings live (Fig. 7 numbers measured on real serving KV).
+Continuous-batching additions (ISSUE 1):
+
+* **Byte budget + LRU eviction.** ``max_stored_bytes`` caps the compressed
+  footprint; when a put crosses the budget, least-recently-used pages are
+  evicted (dropped — ground truth stays in the device working set, so an
+  evicted page costs a re-compress *write* if it ever returns, which the
+  accounting charges).
+* **MemoryController accounting.** Every put/fetch is logged as a
+  kv_write/kv_read :class:`~repro.core.controller.AccessEvent` through a
+  (possibly shared) :class:`~repro.core.controller.MemoryController`, so the
+  DRAM simulator can replay serving traffic and ``report()`` can quote
+  steady-state bandwidth numbers.
+* **Ladder plane hints.** ``set_planes`` records the precision the dynamic
+  quantization ladder assigned to a page; ``account_fetch`` charges exactly
+  those planes' compressed bytes per decode-step read (Fig. 5 semantics).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Tuple
 
 import numpy as np
 
 from repro.core.bitplane import SPECS, FloatSpec
-from repro.core.compressed_store import StoreConfig, compress_kv, decompress_kv
+from repro.core.compressed_store import StoreConfig
+from repro.core.controller import MemoryController
 
 PAGE_TOKENS = 16
 
@@ -35,27 +50,87 @@ class PageKey:
         return (self.seq_id, self.layer, self.page_idx, self.stream)
 
 
+class PageEvictedError(KeyError):
+    """Raised when a page was LRU-evicted under the byte budget; the caller
+    re-activates it by re-putting from the device working set."""
+
+
 class CompressedKVStore:
-    """Host-side paged store with compression on write."""
+    """Host-side paged store with compression on write and LRU eviction.
+
+    ``max_stored_bytes=None`` (default) disables the budget — the seed
+    behaviour.  With a budget, puts evict cold pages LRU-first until the
+    compressed footprint fits (a single page larger than the whole budget is
+    kept: evicting the page just written would livelock the writer).
+    """
 
     def __init__(self, spec: FloatSpec = SPECS["bf16"],
-                 config: StoreConfig | None = None):
+                 config: StoreConfig | None = None,
+                 max_stored_bytes: int | None = None,
+                 controller: MemoryController | None = None):
         self.spec = spec
         self.config = config or StoreConfig()
-        self._pages: Dict[Tuple, object] = {}
+        self.max_stored_bytes = max_stored_bytes
+        self.controller = controller or MemoryController(self.config)
+        self._lru: "OrderedDict[Tuple, int]" = OrderedDict()  # key -> stored bytes
+        self._planes: Dict[Tuple, int | None] = {}  # ladder hints
+        self._logical = 0
+        self._stored = 0
+        self.counters = {
+            "evictions": 0, "evicted_bytes": 0,
+            "hits": 0, "misses": 0, "reactivations": 0,
+        }
 
-    # ------------------------------------------------------------------
-    def put_page(self, key: PageKey, kv: np.ndarray) -> None:
+    # ------------------------------------------------------------------ pages
+    def put_page(self, key: PageKey, kv: np.ndarray,
+                 planes: int | None = None) -> None:
         """kv: (PAGE_TOKENS, channels) in the store's value dtype."""
         assert kv.shape[0] == PAGE_TOKENS, kv.shape
-        self._pages[key.astuple()] = compress_kv(kv, self.spec, self.config)
+        kt = key.astuple()
+        if kt in self._lru:
+            self._forget(kt)
+        ct = self.controller.write_kv_page(kt, kv, self.spec)
+        self._lru[kt] = ct.stored_bytes
+        self._planes[kt] = planes
+        self._logical += ct.logical_bytes
+        self._stored += ct.stored_bytes
+        self._enforce_budget(protect=kt)
 
     def get_page(self, key: PageKey, keep_planes: int | None = None) -> np.ndarray:
-        ct = self._pages[key.astuple()]
-        return decompress_kv(ct, keep_planes)
+        """Decompress a page (optionally at reduced precision).  Raises
+        :class:`PageEvictedError` if the budget already reclaimed it."""
+        kt = key.astuple()
+        self._require(kt)
+        self._lru.move_to_end(kt)
+        if keep_planes is None:
+            keep_planes = self._planes.get(kt)
+        return self.controller.read_kv_page(kt, keep_planes)
 
-    def put_sequence(self, seq_id: int, layer: int, stream: str, kv: np.ndarray) -> int:
-        """kv: (tokens, channels); pads the tail page. Returns pages written."""
+    def account_fetch(self, key: PageKey, keep_planes: int | None = None) -> int:
+        """Accounting-only read (values already resident on device): logs the
+        kv_read event at the ladder precision and returns physical bytes."""
+        kt = key.astuple()
+        self._require(kt)
+        self._lru.move_to_end(kt)
+        if keep_planes is None:
+            keep_planes = self._planes.get(kt)
+        return self.controller.account_kv_read(kt, keep_planes)
+
+    def set_planes(self, key: PageKey, planes: int | None) -> None:
+        kt = key.astuple()
+        if kt in self._lru:
+            self._planes[kt] = planes
+
+    def contains(self, key: PageKey) -> bool:
+        return key.astuple() in self._lru
+
+    # -------------------------------------------------------------- sequences
+    def put_sequence(self, seq_id: int, layer: int, stream: str, kv: np.ndarray,
+                     first_page: int = 0, planes: int | None = None) -> int:
+        """kv: (tokens, channels); pads the tail page. Returns pages written.
+
+        ``first_page`` offsets the page index — the scheduler streams decode
+        pages into the store incrementally as each fills."""
         t = kv.shape[0]
         n_pages = -(-t // PAGE_TOKENS)
         for p in range(n_pages):
@@ -63,7 +138,8 @@ class CompressedKVStore:
             if chunk.shape[0] < PAGE_TOKENS:
                 pad = np.repeat(chunk[-1:], PAGE_TOKENS - chunk.shape[0], axis=0)
                 chunk = np.concatenate([chunk, pad])
-            self.put_page(PageKey(seq_id, layer, p, stream), chunk)
+            self.put_page(PageKey(seq_id, layer, first_page + p, stream), chunk,
+                          planes=planes)
         return n_pages
 
     def get_sequence(self, seq_id: int, layer: int, stream: str, tokens: int,
@@ -76,16 +152,54 @@ class CompressedKVStore:
         return np.concatenate(parts)[:tokens]
 
     def drop_sequence(self, seq_id: int) -> None:
-        self._pages = {k: v for k, v in self._pages.items() if k[0] != seq_id}
+        """Retire a finished request: free its pages (no bus traffic)."""
+        for kt in [k for k in self._lru if k[0] == seq_id]:
+            self._forget(kt)
+
+    def sequence_pages(self, seq_id: int) -> list:
+        return [k for k in self._lru if k[0] == seq_id]
+
+    # -------------------------------------------------------------- eviction
+    def _require(self, kt: Tuple) -> None:
+        if kt not in self._lru:
+            self.counters["misses"] += 1
+            raise PageEvictedError(kt)
+        self.counters["hits"] += 1
+
+    def _forget(self, kt: Tuple) -> None:
+        stored = self._lru.pop(kt)
+        self._planes.pop(kt, None)
+        ct = self.controller.drop_kv_page(kt)
+        self._stored -= stored
+        if ct is not None:
+            self._logical -= ct.logical_bytes
+
+    def _enforce_budget(self, protect: Tuple) -> None:
+        if self.max_stored_bytes is None:
+            return
+        while self._stored > self.max_stored_bytes and len(self._lru) > 1:
+            victim = next(iter(self._lru))
+            if victim == protect:
+                # never evict the page being written; try the next-coldest
+                victims = iter(self._lru)
+                next(victims)
+                try:
+                    victim = next(victims)
+                except StopIteration:
+                    return
+            stored = self._lru[victim]
+            self._forget(victim)
+            self.counters["evictions"] += 1
+            self.counters["evicted_bytes"] += stored
 
     # ------------------------------------------------------------ accounting
     def footprint(self) -> dict:
-        logical = sum(ct.logical_bytes for ct in self._pages.values())
-        stored = sum(ct.stored_bytes for ct in self._pages.values())
         return {
-            "pages": len(self._pages),
-            "logical_bytes": logical,
-            "stored_bytes": stored,
-            "ratio": logical / max(1, stored),
-            "saving": 1.0 - stored / max(1, logical),
+            "pages": len(self._lru),
+            "logical_bytes": self._logical,
+            "stored_bytes": self._stored,
+            "ratio": self._logical / max(1, self._stored),
+            "saving": 1.0 - self._stored / max(1, self._logical),
+            "budget_bytes": self.max_stored_bytes,
+            **self.counters,
         }

@@ -1,0 +1,110 @@
+"""Deterministic stand-in for ``hypothesis`` on bare environments.
+
+The tier-1 suite must *collect and pass* without third-party test deps
+(ISSUE 1).  When ``hypothesis`` is importable the test modules use it
+directly; otherwise they fall back to this shim, which replays each property
+test over a fixed-seed stream of generated examples.  Only the small strategy
+surface the suite actually uses is implemented: integers, lists, binary,
+floats, sampled_from, composite.
+
+No shrinking, no database, no coverage-guided generation — just enough
+example diversity (seeded PCG64) that round-trip properties still get
+meaningful exercise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng) -> object:
+        return self._draw(rng)
+
+
+class _Strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st``)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(r):
+            n = int(r.integers(min_size, max_size + 1))
+            return [elements.example(r) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def binary(min_size=0, max_size=64):
+        def draw(r):
+            n = int(r.integers(min_size, max_size + 1))
+            # Mix incompressible and repetitive payloads: codec round-trip
+            # properties care about both regimes.
+            if n and r.random() < 0.5:
+                chunk = r.integers(0, 256, max(1, n // 8), dtype=np.uint8)
+                reps = -(-n // len(chunk))
+                return np.tile(chunk, reps)[:n].tobytes()
+            return r.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False):  # noqa: ARG004
+        return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda r: options[int(r.integers(0, len(options)))])
+
+    @staticmethod
+    def composite(fn):
+        def build(*args, **kwargs):
+            def draw_value(r):
+                return fn(lambda strat: strat.example(r), *args, **kwargs)
+
+            return _Strategy(draw_value)
+
+        return build
+
+
+st = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):  # noqa: ARG001
+    """Records max_examples on the test function for ``given`` to honour."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Runs the test over ``max_examples`` fixed-seed generated inputs."""
+
+    def deco(fn):
+        def runner():
+            n = getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies))
+
+        # Plain attribute copies only: functools.wraps would set __wrapped__
+        # and pytest would then introspect the original signature and demand
+        # fixtures for the generated arguments.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco

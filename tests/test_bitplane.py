@@ -4,8 +4,11 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare env: fixed-seed fallback shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import bitplane as bp
 

@@ -6,6 +6,7 @@ import ml_dtypes
 import numpy as np
 import pytest
 
+from repro.compression import have_zstd
 from repro.core.bitplane import BF16, SPECS
 from repro.core.compressed_store import (
     StoreConfig,
@@ -19,7 +20,12 @@ from repro.core.quantization import truncate_uint
 from repro.core.surrogates import gaussian_weights, logmag_kv_cache
 
 
-@pytest.mark.parametrize("codec", ["zstd", "lz4"])
+@pytest.mark.parametrize(
+    "codec",
+    [pytest.param("zstd", marks=pytest.mark.skipif(
+        not have_zstd(), reason="optional zstandard package not installed")),
+     "lz4"],
+)
 @pytest.mark.parametrize("layout", ["bitplane", "raw"])
 def test_weights_roundtrip_exact(codec, layout, rng):
     w = gaussian_weights((300, 70), seed=3)

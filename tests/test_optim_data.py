@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare env: fixed-seed fallback shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data import DataConfig, ShardedLoader, synthetic_corpus
 from repro.data.tokenizer import ByteTokenizer

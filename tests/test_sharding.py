@@ -12,10 +12,19 @@ from repro.optim.adamw import adamw_init
 from repro.runtime import sharding
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: >=0.5 takes (sizes, names); 0.4.x
+    takes a single ((name, size), ...) shape tuple."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(spec_tree, shape_tree, mesh):
