@@ -26,7 +26,9 @@ MODULES = [
     ("fig11", "benchmarks.fig11_load_latency", {}),
     ("table4", "benchmarks.table4_hardware_cost", {}),
     ("serving", "benchmarks.serving_throughput",
-     {"fast": dict(n_requests=8, rate=0.8)}),
+     {"fast": dict(n_requests=8, rate=0.8, max_steps=200)}),
+    ("engine_util", "benchmarks.engine_utilization",
+     {"fast": dict(n_requests=6, rate=0.8, max_steps=150)}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]

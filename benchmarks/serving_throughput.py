@@ -32,12 +32,14 @@ def _mixed_requests(n, seed, vocab, max_new_choices=(4, 8, 16, 24)):
     return reqs
 
 
-def _run_continuous(model, params, cfg, reqs, arrivals):
+def _run_continuous(model, params, cfg, reqs, arrivals, max_steps=None):
     from repro.serving import ContinuousScheduler
 
     sched = ContinuousScheduler(model, params, cfg)
     next_req = 0
     while next_req < len(reqs) or sched.has_work():
+        if max_steps is not None and sched.step_count >= max_steps:
+            break
         while next_req < len(reqs) and arrivals[next_req] <= sched.step_count:
             sched.submit(reqs[next_req])
             next_req += 1
@@ -45,21 +47,30 @@ def _run_continuous(model, params, cfg, reqs, arrivals):
     return sched.report()
 
 
-def _run_waves(model, params, cfg, reqs):
+def _run_waves(model, params, cfg, reqs, max_steps=None):
     """Seed-style one-shot batching: admit in fixed waves of max_batch."""
     from repro.serving import ServingEngine
 
     eng = ServingEngine(model, params, cfg)
+    budget = max_steps
     for off in range(0, len(reqs), cfg.max_batch):
+        if budget is not None and budget <= 0:
+            break
         wave = reqs[off : off + cfg.max_batch]
         # one-shot semantics: nothing joins until the whole wave drains
         for r in wave:
             eng.scheduler.submit(r)
-        eng.scheduler.run_until_drained()
+        before = eng.scheduler.step_count
+        eng.scheduler.run_until_drained(
+            max_steps=budget if budget is not None else 100_000
+        )
+        if budget is not None:
+            budget -= eng.scheduler.step_count - before
     return eng.report()
 
 
-def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0):
+def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0,
+        max_steps: int | None = None):
     import jax
 
     from repro.configs.base import get_config
@@ -86,9 +97,10 @@ def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0):
 
     cont = _run_continuous(model, params, cfg,
                            _mixed_requests(n_requests, seed, cfg_m.vocab),
-                           arrivals)
+                           arrivals, max_steps=max_steps)
     wave = _run_waves(model, params, cfg,
-                      _mixed_requests(n_requests, seed, cfg_m.vocab))
+                      _mixed_requests(n_requests, seed, cfg_m.vocab),
+                      max_steps=max_steps)
 
     rows = []
     out = {}
@@ -120,4 +132,13 @@ def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=0.6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="cap scheduler steps per mode (CI-sized runs)")
+    a = ap.parse_args()
+    run(n_requests=a.requests, rate=a.rate, seed=a.seed, max_steps=a.steps)

@@ -38,6 +38,9 @@ class AccessEvent:
     logical_bytes: int  # what the compute fabric asked for
     physical_bytes: int  # what actually moved on the DRAM bus
     planes: int | None = None  # precision fetched, if partial
+    #: (de)compression-engine cycle the transfer was serviced at, stamped
+    #: when a memctl EngineClock is attached; None = unmodeled/infinite engine
+    cycle: int | None = None
 
 
 @dataclasses.dataclass
@@ -93,12 +96,24 @@ class MemoryController:
         self._weights: Dict[str, CompressedTensor] = {}
         self._kv_pages: Dict[tuple, CompressedTensor] = {}
         self.stats = ControllerStats(retain_events=retain_events)
+        self._engine_clock = None  # memctl EngineClock, when serving attaches one
+
+    def attach_engine_clock(self, clock) -> None:
+        """Stamp every subsequent AccessEvent with the (de)compression
+        engine's service cycle (memctl runtime runs job bookkeeping at
+        modeled service time, so ``clock.now`` IS the service cycle)."""
+        self._engine_clock = clock
+
+    def _log(self, ev: AccessEvent) -> None:
+        if self._engine_clock is not None:
+            ev.cycle = self._engine_clock.now
+        self.stats.log(ev)
 
     # -------------------------------------------------------------- weights
     def write_weights(self, name: str, arr: np.ndarray, spec: FloatSpec) -> CompressedTensor:
         ct = compress_weights(arr, spec, self.config)
         self._weights[name] = ct
-        self.stats.log(
+        self._log(
             AccessEvent("weight_write", name, ct.logical_bytes, ct.stored_bytes)
         )
         return ct
@@ -106,7 +121,7 @@ class MemoryController:
     def read_weights(self, name: str, planes: int | None = None) -> np.ndarray:
         ct = self._weights[name]
         fetched = ct.fetch_bytes(planes)
-        self.stats.log(
+        self._log(
             AccessEvent("weight_read", name, ct.logical_bytes, fetched, planes)
         )
         return decompress_weights(ct, planes)
@@ -118,7 +133,7 @@ class MemoryController:
         """key: (layer, head_group, page_index); kv: (tokens, channels)."""
         ct = compress_kv(kv, spec, self.config)
         self._kv_pages[key] = ct
-        self.stats.log(
+        self._log(
             AccessEvent("kv_write", str(key), ct.logical_bytes, ct.stored_bytes)
         )
         return ct
@@ -126,7 +141,7 @@ class MemoryController:
     def _log_kv_read(self, key: tuple, planes: int | None) -> tuple:
         ct = self._kv_pages[key]
         fetched = ct.fetch_bytes(planes)
-        self.stats.log(AccessEvent("kv_read", str(key), ct.logical_bytes, fetched, planes))
+        self._log(AccessEvent("kv_read", str(key), ct.logical_bytes, fetched, planes))
         return ct, fetched
 
     def read_kv_page(self, key: tuple, planes: int | None = None) -> np.ndarray:

@@ -101,3 +101,9 @@ class CompressionEngineModel:
     def sustains_bandwidth(self, demand_gbps: float, block_bits: int) -> bool:
         """Does the engine keep up with a given decompressed-side demand?"""
         return self.lanes * LANE_THROUGHPUT_GBPS / 8 >= demand_gbps
+
+    def lane_bytes_per_cycle(self) -> float:
+        """Decompressed-side bytes one lane moves per clock cycle — the
+        calibration constant :mod:`repro.memctl` schedules lane time with
+        (512 Gb/s at 2 GHz = 32 B/cycle)."""
+        return LANE_THROUGHPUT_GBPS / 8.0 / self.clock_ghz

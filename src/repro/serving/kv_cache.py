@@ -39,6 +39,21 @@ from repro.core.controller import MemoryController
 PAGE_TOKENS = 16
 
 
+def iter_page_chunks(kv: np.ndarray, first_page: int = 0):
+    """Yield ``(page_idx, chunk)`` page-splits of ``kv`` (tokens, channels);
+    the tail page is padded by repeating the last token, so the pad never
+    pollutes the delta-decorrelation stats.  Shared by direct store puts
+    and the scheduler's engine-queued writes — one definition of page
+    padding semantics."""
+    t = kv.shape[0]
+    for p in range(-(-t // PAGE_TOKENS)):
+        chunk = kv[p * PAGE_TOKENS : (p + 1) * PAGE_TOKENS]
+        if chunk.shape[0] < PAGE_TOKENS:
+            pad = np.repeat(chunk[-1:], PAGE_TOKENS - chunk.shape[0], axis=0)
+            chunk = np.concatenate([chunk, pad])
+        yield first_page + p, chunk
+
+
 @dataclasses.dataclass
 class PageKey:
     seq_id: int
@@ -67,11 +82,15 @@ class CompressedKVStore:
     def __init__(self, spec: FloatSpec = SPECS["bf16"],
                  config: StoreConfig | None = None,
                  max_stored_bytes: int | None = None,
-                 controller: MemoryController | None = None):
+                 controller: MemoryController | None = None,
+                 engine=None):
         self.spec = spec
         self.config = config or StoreConfig()
         self.max_stored_bytes = max_stored_bytes
         self.controller = controller or MemoryController(self.config)
+        #: optional memctl CompressionEngineRuntime — budget evictions then
+        #: queue a background write-back job instead of being free/instant
+        self.engine = engine
         self._lru: "OrderedDict[Tuple, int]" = OrderedDict()  # key -> stored bytes
         self._planes: Dict[Tuple, int | None] = {}  # ladder hints
         self._logical = 0
@@ -124,6 +143,18 @@ class CompressedKVStore:
     def contains(self, key: PageKey) -> bool:
         return key.astuple() in self._lru
 
+    def fetch_engine_bytes(self, key: PageKey) -> int:
+        """Decompressed-side bytes the engine must produce for this page's
+        default (ladder-hinted) fetch — the memctl lane pool's job size.
+        Lane throughput is rated on the decompressed side (512 Gb/s), so a
+        partial-plane fetch costs planes/bits of the logical page."""
+        kt = key.astuple()
+        ct = self.controller.kv_page(kt)
+        keep = self._planes.get(kt)
+        if keep is None:
+            return ct.logical_bytes
+        return max(1, round(ct.logical_bytes * keep / ct.spec.bits))
+
     # -------------------------------------------------------------- sequences
     def put_sequence(self, seq_id: int, layer: int, stream: str, kv: np.ndarray,
                      first_page: int = 0, planes: int | None = None) -> int:
@@ -131,15 +162,11 @@ class CompressedKVStore:
 
         ``first_page`` offsets the page index — the scheduler streams decode
         pages into the store incrementally as each fills."""
-        t = kv.shape[0]
-        n_pages = -(-t // PAGE_TOKENS)
-        for p in range(n_pages):
-            chunk = kv[p * PAGE_TOKENS : (p + 1) * PAGE_TOKENS]
-            if chunk.shape[0] < PAGE_TOKENS:
-                pad = np.repeat(chunk[-1:], PAGE_TOKENS - chunk.shape[0], axis=0)
-                chunk = np.concatenate([chunk, pad])
-            self.put_page(PageKey(seq_id, layer, first_page + p, stream), chunk,
+        n_pages = 0
+        for p, chunk in iter_page_chunks(kv, first_page):
+            self.put_page(PageKey(seq_id, layer, p, stream), chunk,
                           planes=planes)
+            n_pages += 1
         return n_pages
 
     def get_sequence(self, seq_id: int, layer: int, stream: str, tokens: int,
@@ -191,6 +218,10 @@ class CompressedKVStore:
             self._forget(victim)
             self.counters["evictions"] += 1
             self.counters["evicted_bytes"] += stored
+            if self.engine is not None:
+                # the engine streams the victim's compressed bytes out to
+                # the capacity tier: background lane occupancy, no bus event
+                self.engine.submit_eviction(victim, stored, seq_id=victim[0])
 
     # ------------------------------------------------------------ accounting
     def footprint(self) -> dict:

@@ -33,6 +33,18 @@ with the serving loop the paper's accounting actually pays off in:
   precision ladder re-assigned, so plane counts track context as it grows
   (context-dependent dynamic quantization, paper §II.C).
 
+* **Finite-throughput engine (ISSUE 2).**  No (de)compression happens
+  inline on the step path any more: page writes, decode fetches, and
+  re-activations are *submitted* to the
+  :class:`~repro.memctl.CompressionEngineRuntime` — the paper's 32 x
+  512 Gb/s lane engine as a cycle-approximate runtime — and serviced once
+  per step in strict priority order (decode fetch > KV write > background
+  re-compress) within the lane pool's per-step byte budget.  Work that
+  does not fit the window spills to later steps: re-activations defer,
+  queue depth grows, and ``report()`` quotes engine utilization and
+  engine-limited latency instead of assuming infinite (de)compression
+  bandwidth.
+
 Scope: families with a plain dense decode cache ({"k","v","len"}; dense/moe,
 full attention, no staging ring).  ``engine.ServingEngine`` keeps the old
 one-shot ``run()`` as a thin submit+drain wrapper.
@@ -50,6 +62,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression import default_codec
+from repro.core.compressed_store import StoreConfig
 from repro.core.controller import MemoryController
 from repro.core.quantization import (
     PrecisionLadder,
@@ -57,12 +71,19 @@ from repro.core.quantization import (
     page_minmax,
     quest_scores,
 )
+from repro.memctl import (
+    CompressionEngineRuntime,
+    Job,
+    JobClass,
+    MemCtlConfig,
+)
 from repro.models.model import Model
 from repro.serving.kv_cache import (
     PAGE_TOKENS,
     CompressedKVStore,
     PageEvictedError,
     PageKey,
+    iter_page_chunks,
 )
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -96,6 +117,14 @@ class EngineConfig:
     #: left-pad prompts to a multiple of this (bounds prefill recompiles and
     #: page-aligns the stored prefill KV); PAGE_TOKENS keeps seed semantics
     prefill_align: int = PAGE_TOKENS
+    #: KV-tier compression codec ('lz4' | 'zstd'); None = default_codec(),
+    #: which picks zstd when the optional package is present, else lz4
+    codec: Optional[str] = None
+    #: (de)compression-engine geometry + per-step service window (memctl
+    #: runtime).  ``MemCtlConfig(step_cycles=None)`` models the pre-memctl
+    #: unbounded engine; ``engine=None`` on the nested config's ``engine``
+    #: field follows ``codec``
+    engine: MemCtlConfig = MemCtlConfig()
 
 
 @dataclasses.dataclass
@@ -144,12 +173,36 @@ class ContinuousScheduler:
         self.model = model
         self.params = params
         self.cfg = cfg
+        codec = cfg.codec or default_codec()
+        store_cfg = StoreConfig(codec=codec)
         # accounting-only by default: one event per resident page per decode
         # step would grow without bound on long runs; pass a controller with
         # retain_events=True to capture a replayable DRAM trace
-        self.controller = controller or MemoryController(retain_events=False)
+        if controller is None:
+            controller = MemoryController(store_cfg, retain_events=False)
+        elif cfg.codec is None:
+            # no explicit codec: follow the caller's controller so the pages
+            # it compresses match the store config and modeled lane silicon
+            codec = controller.config.codec
+            store_cfg = controller.config
+        else:
+            # explicit codec wins end to end — a passed controller must not
+            # silently compress with a different codec than the one the
+            # report's store/silicon numbers are quoted for
+            controller.config = store_cfg
+        self.controller = controller
+        mc = cfg.engine
+        if mc.engine is None:  # lane silicon follows the serving codec
+            # Table IV only characterises lz4/zstd lanes; any other
+            # registered codec falls back to the cheaper lz4 silicon
+            mc = dataclasses.replace(
+                mc, engine=codec if codec in ("lz4", "zstd") else "lz4"
+            )
+        self.engine = CompressionEngineRuntime(mc)
+        self.controller.attach_engine_clock(self.engine.clock)
         self.store = CompressedKVStore(
-            max_stored_bytes=cfg.max_stored_bytes, controller=self.controller
+            config=store_cfg, max_stored_bytes=cfg.max_stored_bytes,
+            controller=self.controller, engine=self.engine,
         )
         self._prefill, self._decode = _jitted(model)
         self._waiting: Deque[Request] = deque()
@@ -163,6 +216,8 @@ class ContinuousScheduler:
             "requests_submitted": 0, "requests_completed": 0,
             "decode_steps": 0, "decode_batch_occupancy": 0.0,
             "kv_reactivations": 0,
+            "kv_fetch_misses": 0, "kv_fetch_deferrals": 0,
+            "engine_jobs_cancelled": 0,
             "kv_peak_stored_bytes": 0, "kv_peak_logical_bytes": 0,
             "prefill_s": 0.0, "decode_s": 0.0,
         }
@@ -195,15 +250,24 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """Admit -> one batched decode step -> retire.  Returns the requests
-        retired this step."""
+        """Admit -> one batched decode step -> engine tick -> retire.
+        Returns the requests retired this step.
+
+        The engine tick is where every (de)compression submitted this step
+        — prefill/decode page writes, decode fetches, re-activations — is
+        serviced against the lane pool's per-step budget; leftovers stay
+        queued for later windows."""
         for slot_id, slot in enumerate(self._slots):
             if slot is None and self._waiting:
                 self._admit(self._waiting.popleft(), slot_id)
         if self.active == 0:
+            self.engine.tick()    # engine windows track wall steps
             self.step_count += 1  # idle tick: arrival traces keyed on
             return []             # step_count must still advance time
         self._decode_step()
+        self.engine.tick()
+        if self.cfg.store_kv_compressed:
+            self._note_peaks()
         self.step_count += 1
         return self._retire_finished()
 
@@ -247,10 +311,9 @@ class ContinuousScheduler:
         if cfg.store_kv_compressed:
             k_np, v_np = self._slot_kv_host(slot_id, 0, s)
             for li in range(k_np.shape[0]):
-                self.store.put_sequence(req.rid, li, "k", k_np[li])
-                self.store.put_sequence(req.rid, li, "v", v_np[li])
+                self._submit_sequence_writes(slot_id, req.rid, li, "k", k_np[li])
+                self._submit_sequence_writes(slot_id, req.rid, li, "v", v_np[li])
             self._assign_ladder_planes(slot_id)
-            self._note_peaks()
 
     def _build_cache(self):
         cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
@@ -308,16 +371,44 @@ class ContinuousScheduler:
                     self._store_page(i, ln // PAGE_TOKENS - 1)
                     self._assign_ladder_planes(i)
                 self._account_step_fetch(i)
-        if self.cfg.store_kv_compressed:
-            self._note_peaks()
+
+    # -------------------------------------------------- engine job submission
+    def _submit_page_write(self, slot_id: int, key: PageKey,
+                           chunk: np.ndarray,
+                           klass: JobClass = JobClass.KV_WRITE) -> None:
+        """Queue one page's compress-and-store on the engine.  The chunk is
+        captured at submit time (the token range is append-only, so it
+        cannot change); the store put — and its charged kv_write — happens
+        when the engine services the job, at the ladder planes assigned by
+        then."""
+        slot = self._slots[slot_id]
+
+        def fn(key=key, chunk=chunk, slot=slot):
+            self.store.put_page(key, chunk,
+                                planes=slot.page_planes.get(key.page_idx))
+
+        self.engine.submit(Job(klass, chunk.nbytes, fn=fn,
+                               key=key.astuple(), seq_id=key.seq_id))
+
+    def _submit_sequence_writes(self, slot_id: int, rid: int, layer: int,
+                                stream: str, kv: np.ndarray,
+                                first_page: int = 0) -> None:
+        """Page-split ``kv`` (tokens, channels) and queue one write job per
+        page (same split/tail-pad as ``CompressedKVStore.put_sequence``)."""
+        for p, chunk in iter_page_chunks(kv, first_page):
+            self._submit_page_write(
+                slot_id, PageKey(rid, layer, p, stream), chunk
+            )
 
     def _store_page(self, slot_id: int, page_idx: int) -> None:
         rid = self._slots[slot_id].req.rid
         t0, t1 = page_idx * PAGE_TOKENS, (page_idx + 1) * PAGE_TOKENS
         k_np, v_np = self._slot_kv_host(slot_id, t0, t1)
         for li in range(k_np.shape[0]):
-            self.store.put_sequence(rid, li, "k", k_np[li], first_page=page_idx)
-            self.store.put_sequence(rid, li, "v", v_np[li], first_page=page_idx)
+            self._submit_sequence_writes(slot_id, rid, li, "k", k_np[li],
+                                         first_page=page_idx)
+            self._submit_sequence_writes(slot_id, rid, li, "v", v_np[li],
+                                         first_page=page_idx)
 
     def _assign_ladder_planes(self, slot_id: int) -> None:
         """Re-rank this slot's pages against the newest query proxy and
@@ -347,31 +438,65 @@ class ContinuousScheduler:
                     self.store.set_planes(PageKey(rid, li, p, stream), keep)
 
     def _account_step_fetch(self, slot_id: int) -> None:
-        """Charge this decode step's KV traffic for one slot: every resident
-        page at its ladder planes; evicted pages are re-activated (a charged
-        re-compress write) before the read."""
+        """Queue this decode step's KV traffic for one slot as
+        decode-critical fetch jobs: every stored-resident page at its ladder
+        planes.  Evicted pages queue a background re-activation instead (a
+        re-compress write, charged once when the engine services it —
+        possibly steps later under load); pages whose write or re-activation
+        is still queued are skipped, since their ground truth is still the
+        device working set and no compressed-tier copy exists to fetch."""
         slot = self._slots[slot_id]
+        rid = slot.req.rid
         n_pages = int(self._lens[slot_id]) // PAGE_TOKENS
         for li in range(self._stored_layers()):
             for stream in ("k", "v"):
                 for p in range(n_pages):
-                    key = PageKey(slot.req.rid, li, p, stream)
-                    try:
-                        self.store.account_fetch(key)
-                    except PageEvictedError:
+                    key = PageKey(rid, li, p, stream)
+                    if self.store.contains(key):
+                        self.engine.submit(Job(
+                            JobClass.DECODE_FETCH,
+                            self.store.fetch_engine_bytes(key),
+                            fn=lambda key=key: self._serviced_fetch(key),
+                            key=key.astuple(), seq_id=rid,
+                        ))
+                    elif (self.engine.pending(key.astuple(), JobClass.KV_WRITE)
+                          or self.engine.pending(key.astuple(),
+                                                 JobClass.BACKGROUND)):
+                        # write or re-activation already queued — only those
+                        # classes restore the page; a stale queued fetch
+                        # must not suppress the re-activation
+                        self.stats["kv_fetch_deferrals"] += 1
+                    else:
                         self._reactivate(slot_id, key)
-                        self.store.account_fetch(key)
+
+    def _serviced_fetch(self, key: PageKey) -> None:
+        """Engine-serviced decode fetch: charge the kv_read at the ladder
+        planes.  The page may have been evicted between submission and
+        service — count the miss; the next step's fetch pass queues the
+        re-activation."""
+        try:
+            self.store.account_fetch(key)
+        except PageEvictedError:
+            self.stats["kv_fetch_misses"] += 1
 
     def _reactivate(self, slot_id: int, key: PageKey) -> None:
-        """An evicted page is needed again: re-compress it from the device
-        working set (the controller charges the kv_write), keeping the plane
-        count the ladder last assigned to it."""
+        """An evicted page is needed again: queue a background re-compress
+        from the device working set, keeping the plane count the ladder last
+        assigned.  The page data is captured at submit time (append-only
+        token range) and the kv_write is charged exactly once, when the
+        engine services the job."""
         t0 = key.page_idx * PAGE_TOKENS
         k_np, v_np = self._slot_kv_host(slot_id, t0, t0 + PAGE_TOKENS)
         page = k_np[key.layer] if key.stream == "k" else v_np[key.layer]
-        planes = self._slots[slot_id].page_planes.get(key.page_idx)
-        self.store.put_page(key, page, planes=planes)
-        self.stats["kv_reactivations"] += 1
+        slot = self._slots[slot_id]
+
+        def fn(key=key, page=page, slot=slot):
+            self.store.put_page(key, page,
+                                planes=slot.page_planes.get(key.page_idx))
+            self.stats["kv_reactivations"] += 1
+
+        self.engine.submit(Job(JobClass.BACKGROUND, page.nbytes, fn=fn,
+                               key=key.astuple(), seq_id=key.seq_id))
 
     def _note_peaks(self) -> None:
         fp = self.store.footprint()
@@ -393,6 +518,11 @@ class ContinuousScheduler:
             if len(r.output) >= r.max_new_tokens or hit_ctx:
                 r.done = True
                 r.finish_step = self.step_count
+                # queued work for a retired request is dead: cancel before
+                # dropping pages so the engine never services stale jobs
+                self.stats["engine_jobs_cancelled"] += (
+                    self.engine.cancel_seq(r.rid)
+                )
                 self.store.drop_sequence(r.rid)
                 self._slots[i] = None
                 self._lens[i] = 0
@@ -423,6 +553,13 @@ class ContinuousScheduler:
         s["kv_evictions"] = fp["evictions"]
         s["kv_evicted_bytes"] = fp["evicted_bytes"]
         s["kv_resident_stored_bytes"] = fp["stored_bytes"]
+        # engine-limited numbers: what the modeled silicon actually sustained
+        er = self.engine.report()
+        s["engine"] = er
+        s["engine_utilization"] = er["utilization"]
+        s["engine_modeled_latency_ns"] = er["modeled_latency_ns"]
+        s["engine_deferred_jobs"] = er["deferred_job_steps"]
+        s["engine_queue_depth_p99"] = er["queue_depth"]["p99"]
         # steady-state accounting: normalise per 1k requests, not per batch
         n = s["requests_completed"]
         if n:

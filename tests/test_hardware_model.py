@@ -1,0 +1,78 @@
+"""Property tests for the Table IV silicon-cost model (ISSUE 2 satellite).
+
+Area/power/throughput of :class:`CompressionEngineModel` must be monotone in
+lane count and block-buffer bits over the whole knob range, and the fitted
+line must stay pinned to the paper's measured ``PAPER_POINTS``.  Runs under
+real ``hypothesis`` when installed, else the fixed-seed fallback shim.
+"""
+
+import pytest
+
+try:  # pragma: no cover - environment-dependent import
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare env: fixed-seed fallback shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.memsim.hardware import (
+    LANE_THROUGHPUT_GBPS,
+    PAPER_POINTS,
+    CompressionEngineModel,
+)
+
+engines = st.sampled_from(["lz4", "zstd"])
+block_bits = st.integers(16384, 65536)
+lane_counts = st.integers(1, 64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(engines, block_bits, block_bits)
+def test_single_lane_cost_monotone_in_block_bits(engine, bb_a, bb_b):
+    lo, hi = sorted((bb_a, bb_b))
+    m = CompressionEngineModel(engine)
+    a, b = m.single_lane(lo), m.single_lane(hi)
+    assert a["area_mm2"] <= b["area_mm2"]
+    assert a["power_mw"] <= b["power_mw"]
+    assert a["area_mm2"] > 0 and a["power_mw"] > 0
+    # per-lane throughput is a constant of the design, not of buffer size
+    assert a["throughput_gbps"] == b["throughput_gbps"] == LANE_THROUGHPUT_GBPS
+
+
+@settings(max_examples=40, deadline=None)
+@given(engines, lane_counts, lane_counts, block_bits)
+def test_total_cost_and_throughput_monotone_in_lanes(engine, la, lb, bb):
+    lo, hi = sorted((la, lb))
+    a = CompressionEngineModel(engine, lanes=lo).total(bb)
+    b = CompressionEngineModel(engine, lanes=hi).total(bb)
+    assert a["area_mm2"] <= b["area_mm2"]
+    assert a["power_mw"] <= b["power_mw"]
+    assert a["throughput_gbps"] <= b["throughput_gbps"]
+    assert a["throughput_gbps"] == lo * LANE_THROUGHPUT_GBPS
+
+
+@settings(max_examples=40, deadline=None)
+@given(lane_counts, block_bits)
+def test_zstd_lane_costs_at_least_lz4(lanes, bb):
+    """ZSTD's match+entropy pipeline strictly contains LZ4's (paper §IV)."""
+    lz4 = CompressionEngineModel("lz4", lanes=lanes).total(bb)
+    zstd = CompressionEngineModel("zstd", lanes=lanes).total(bb)
+    assert zstd["area_mm2"] > lz4["area_mm2"]
+    assert zstd["power_mw"] > lz4["power_mw"]
+    assert zstd["throughput_gbps"] == lz4["throughput_gbps"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(engines, st.floats(0.5, 4.0))
+def test_lane_bytes_per_cycle_calibration(engine, clock_ghz):
+    """The memctl calibration constant: throughput = bytes/cycle x clock."""
+    m = CompressionEngineModel(engine, clock_ghz=clock_ghz)
+    bpc = m.lane_bytes_per_cycle()
+    assert bpc * clock_ghz == pytest.approx(LANE_THROUGHPUT_GBPS / 8)
+    assert CompressionEngineModel(engine).lane_bytes_per_cycle() == 32.0
+
+
+def test_model_pinned_to_paper_points():
+    for (engine, bb), (area, power) in PAPER_POINTS.items():
+        fit = CompressionEngineModel(engine).single_lane(bb)
+        assert fit["area_mm2"] == pytest.approx(area, rel=0.15)
+        assert fit["power_mw"] == pytest.approx(power, rel=0.15)

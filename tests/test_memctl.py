@@ -1,0 +1,298 @@
+"""Memory-controller runtime (ISSUE 2): lane pool, priority queue, per-step
+budgets, deferred re-activation, and the scheduler acceptance invariant —
+per-step serviced bytes never exceed the configured lane budget.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core.quantization import PrecisionLadder
+from repro.core.surrogates import logmag_kv_cache
+from repro.memctl import (
+    CompressionEngineRuntime,
+    Job,
+    JobClass,
+    MemCtlConfig,
+)
+from repro.memsim.trace import replay_controller_trace
+from repro.models.model import build_model
+from repro.serving import ContinuousScheduler, EngineConfig
+from repro.serving.kv_cache import PAGE_TOKENS, CompressedKVStore, PageKey
+from repro.serving.scheduler import Request
+
+
+# ---------------------------------------------------------------------------
+# Runtime unit tests
+# ---------------------------------------------------------------------------
+
+
+def _runtime(lanes=2, step_cycles=64, block_bits=16384):
+    # 2 lanes x 32 B/cycle x 64 cycles = 4096 B per step window
+    return CompressionEngineRuntime(
+        MemCtlConfig(lanes=lanes, step_cycles=step_cycles,
+                     block_bits=block_bits)
+    )
+
+
+def test_budget_bytes_arithmetic():
+    rt = _runtime()
+    assert rt.cfg.lane_bytes_per_cycle == 32.0  # 512 Gb/s at 2 GHz
+    assert rt.cfg.step_budget_bytes == 2 * 32 * 64
+
+
+def test_jobs_service_within_budget_and_defer_overflow():
+    rt = _runtime()
+    order = []
+    for i in range(4):  # 4 x 2048 B = 2 windows of work
+        rt.submit(Job(JobClass.KV_WRITE, 2048, fn=lambda i=i: order.append(i)))
+    out = rt.tick()
+    assert out["serviced_bytes"] == 4096 and out["serviced_jobs"] == 2
+    assert out["deferred_jobs"] == 2 and order == [0, 1]
+    out = rt.tick()
+    assert out["serviced_bytes"] == 4096 and order == [0, 1, 2, 3]
+    assert rt.queue.depth() == 0
+    assert max(rt.stats.step_serviced_bytes) <= rt.cfg.step_budget_bytes
+
+
+def test_strict_priority_fetch_write_background():
+    rt = _runtime(step_cycles=32)  # 2048 B window: one job per tick
+    order = []
+    rt.submit(Job(JobClass.BACKGROUND, 2048, fn=lambda: order.append("bg")))
+    rt.submit(Job(JobClass.KV_WRITE, 2048, fn=lambda: order.append("write")))
+    rt.submit(Job(JobClass.DECODE_FETCH, 2048, fn=lambda: order.append("fetch")))
+    for _ in range(3):
+        rt.tick()
+    assert order == ["fetch", "write", "bg"]
+
+
+def test_oversized_job_carries_across_windows():
+    rt = _runtime()  # 4096 B window
+    done = []
+    rt.submit(Job(JobClass.KV_WRITE, 10_000, fn=lambda: done.append(True)))
+    assert rt.tick()["serviced_jobs"] == 0 and not done
+    assert rt.tick()["serviced_jobs"] == 0 and not done
+    out = rt.tick()  # 4096 + 4096 + 1808
+    assert out["serviced_jobs"] == 1 and done == [True]
+    assert all(b <= rt.cfg.step_budget_bytes
+               for b in rt.stats.step_serviced_bytes)
+
+
+def test_unbounded_mode_services_everything_with_zero_latency():
+    rt = CompressionEngineRuntime(MemCtlConfig(step_cycles=None))
+    for _ in range(50):
+        rt.submit(Job(JobClass.BACKGROUND, 1 << 20))
+    out = rt.tick()
+    assert out["serviced_jobs"] == 50 and out["deferred_jobs"] == 0
+    rep = rt.report()
+    assert rep["unbounded"] and rep["step_budget_bytes"] is None
+    assert rep["modeled_latency_ns"] == 0.0 and rep["utilization"] == 0.0
+
+
+def test_cancel_seq_drops_queued_jobs():
+    rt = _runtime(step_cycles=1)  # nothing services in one tick
+    rt.submit(Job(JobClass.KV_WRITE, 2048, key=("a",), seq_id=7))
+    rt.submit(Job(JobClass.BACKGROUND, 2048, key=("b",), seq_id=7))
+    rt.submit(Job(JobClass.KV_WRITE, 2048, key=("c",), seq_id=8))
+    assert rt.pending(("a",)) and rt.pending(("c",))
+    assert rt.cancel_seq(7) == 2
+    assert not rt.pending(("a",)) and rt.pending(("c",))
+    assert rt.stats.cancelled_jobs == 2
+
+
+def test_lane_pool_backlog_raises_utilization_and_lag():
+    rt = _runtime(lanes=1, step_cycles=32)  # 1024 B per window
+    for _ in range(8):
+        rt.submit(Job(JobClass.KV_WRITE, 1024))
+        rt.tick()
+    busy = rt.report()
+    assert busy["utilization"] > 0.9
+    idle = _runtime(lanes=32, step_cycles=4096)
+    idle.submit(Job(JobClass.KV_WRITE, 1024))
+    for _ in range(8):
+        idle.tick()
+    assert idle.report()["utilization"] < busy["utilization"]
+
+
+def test_pending_index_survives_duplicate_keys():
+    """Regression: the scheduler queues the same fetch key once per step
+    under backlog; pending() must stay True until the LAST duplicate is
+    popped or cancelled, not flip False after the first pop."""
+    rt = _runtime(step_cycles=1)
+    rt.submit(Job(JobClass.DECODE_FETCH, 2048, key=("k",), seq_id=1))
+    rt.submit(Job(JobClass.DECODE_FETCH, 2048, key=("k",), seq_id=1))
+    assert rt.queue.pop() is not None
+    assert rt.queue.depth() == 1 and rt.pending(("k",))
+    assert rt.queue.pop() is not None
+    assert not rt.pending(("k",))
+    # same through cancel_seq
+    rt.submit(Job(JobClass.KV_WRITE, 1, key=("w",), seq_id=2))
+    rt.submit(Job(JobClass.KV_WRITE, 1, key=("w",), seq_id=2))
+    assert rt.cancel_seq(2) == 2 and not rt.pending(("w",))
+
+
+def test_zero_byte_job_completes_without_livelock():
+    rt = _runtime()
+    done = []
+    rt.submit(Job(JobClass.BACKGROUND, 0, fn=lambda: done.append(True)))
+    assert rt.tick()["serviced_jobs"] == 1 and done == [True]
+
+
+# ---------------------------------------------------------------------------
+# Store eviction write-back goes through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_store_eviction_submits_background_writeback():
+    probe = CompressedKVStore()
+    probe.put_page(PageKey(0, 0, 0), logmag_kv_cache(PAGE_TOKENS, 64, seed=0))
+    page_bytes = probe.footprint()["stored_bytes"]
+
+    rt = _runtime(step_cycles=1)
+    store = CompressedKVStore(max_stored_bytes=int(2.5 * page_bytes), engine=rt)
+    for p in range(3):
+        store.put_page(PageKey(0, 0, p), logmag_kv_cache(PAGE_TOKENS, 64, seed=p))
+    assert store.footprint()["evictions"] == 1
+    assert rt.queue.depth(JobClass.BACKGROUND) == 1  # write-back queued
+
+
+# ---------------------------------------------------------------------------
+# Scheduler acceptance: bounded engine on the serving path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompt(n, offset=0):
+    return ((np.arange(n) + offset) % 500).astype(np.int32)
+
+
+def test_step_path_never_exceeds_lane_budget(smoke_model):
+    """ISSUE 2 acceptance: no unbounded inline (de)compression on the step
+    path — per-step serviced bytes stay within the configured lane budget
+    while work spills across steps, and report() quotes the engine-limited
+    numbers."""
+    model, params = smoke_model
+    eng = MemCtlConfig(lanes=4, step_cycles=64)  # 8 KB per step window
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=192,
+        ladder=PrecisionLadder([(2, 16), (2, 8), (-1, 4)]),
+        engine=eng,
+    ))
+    sched.submit(Request(rid=0, prompt=_prompt(20), max_new_tokens=4))
+    sched.submit(Request(rid=1, prompt=_prompt(90, 3), max_new_tokens=24))
+    sched.run_until_drained()
+
+    budget = sched.engine.cfg.step_budget_bytes
+    per_step = sched.engine.stats.step_serviced_bytes
+    assert per_step and all(b <= budget for b in per_step)
+    assert max(per_step) == budget  # the window really saturated
+
+    rep = sched.report()
+    assert rep["engine_deferred_jobs"] > 0  # work spilled across steps
+    assert 0 < rep["engine_utilization"] <= 1
+    assert rep["engine_modeled_latency_ns"] > 0
+    assert rep["engine_queue_depth_p99"] > 0
+    assert 0 < rep["kv_capacity_saving"] < 1
+    assert 0 < rep["kv_bandwidth_saving"] < 1
+
+
+def test_deferred_reactivation_charges_once_and_loses_no_page(smoke_model):
+    """Satellite: tight max_stored_bytes + tiny engine window -> evictions
+    force re-activations the engine defers across steps.  Every page the
+    ladder still needs comes back (no page lost), and each re-activation is
+    charged exactly one kv_write — never double-submitted while queued."""
+    model, params = smoke_model
+    ladder = PrecisionLadder([(2, 16), (2, 8), (-1, 4)])
+
+    # calibrate an aggressive budget from an unconstrained run
+    probe = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=192, ladder=ladder))
+    for rid in range(2):
+        probe.submit(Request(rid=rid, prompt=_prompt(80, rid * 3),
+                             max_new_tokens=20))
+    probe.run_until_drained()
+    peak = probe.report()["kv_peak_stored_bytes"]
+
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=192, ladder=ladder,
+        max_stored_bytes=peak // 3,
+        engine=MemCtlConfig(lanes=2, step_cycles=512),  # 32 KB per window
+    ))
+    reqs = [Request(rid=rid, prompt=_prompt(80, rid * 3), max_new_tokens=20)
+            for rid in range(2)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+
+    rep = sched.report()
+    assert all(r.done and len(r.output) == 20 for r in reqs)
+    assert rep["kv_evictions"] > 0
+    assert rep["kv_reactivations"] > 0
+    # deferred across steps: demand arrived while re-activations sat queued
+    assert rep["kv_fetch_deferrals"] > 0
+    # budget respected while thrashing
+    assert rep["kv_peak_stored_bytes"] <= peak // 3 + 1
+    per_step = sched.engine.stats.step_serviced_bytes
+    assert all(b <= sched.engine.cfg.step_budget_bytes for b in per_step)
+    # charged exactly once: every kv_write event is one serviced KV_WRITE
+    # job or one serviced re-activation (BACKGROUND eviction write-backs
+    # carry no kv_write, so they must not inflate the count)
+    n_writes = sched.controller.stats.totals["kv_write"][2]
+    bg_evict_jobs = (sched.engine.stats.serviced_jobs["BACKGROUND"]
+                     - rep["kv_reactivations"])
+    assert bg_evict_jobs >= 0
+    assert n_writes == (sched.engine.stats.serviced_jobs["KV_WRITE"]
+                        + rep["kv_reactivations"])
+
+
+def test_passed_controller_follows_engine_codec(smoke_model):
+    """Regression: an explicit EngineConfig.codec must govern the pages a
+    caller-passed controller compresses, and with no explicit codec the
+    scheduler follows the controller's config — never two codecs at once."""
+    from repro.core.compressed_store import StoreConfig
+    from repro.core.controller import MemoryController
+
+    model, params = smoke_model
+    ctrl = MemoryController(StoreConfig(codec="lz4"), retain_events=True)
+    sched = ContinuousScheduler(
+        model, params, EngineConfig(max_batch=1, max_ctx=96, codec="lz4"),
+        controller=ctrl,
+    )
+    assert ctrl.config.codec == "lz4" == sched.store.config.codec
+
+    ctrl2 = MemoryController(StoreConfig(codec="lz4"), retain_events=True)
+    sched2 = ContinuousScheduler(
+        model, params, EngineConfig(max_batch=1, max_ctx=96),  # codec=None
+        controller=ctrl2,
+    )
+    assert sched2.store.config is ctrl2.config
+    assert sched2.engine.cfg.engine == "lz4"
+
+
+def test_engine_cycles_stamp_events_and_replay_quotes_engine_latency(smoke_model):
+    model, params = smoke_model
+    from repro.core.controller import MemoryController
+    ctrl = MemoryController(retain_events=True)
+    sched = ContinuousScheduler(
+        model, params,
+        EngineConfig(max_batch=2, max_ctx=128,
+                     engine=MemCtlConfig(lanes=2, step_cycles=128)),
+        controller=ctrl,
+    )
+    sched.submit(Request(rid=0, prompt=_prompt(40), max_new_tokens=8))
+    sched.run_until_drained()
+    kv_events = [e for e in ctrl.stats.events if e.kind.startswith("kv")]
+    assert kv_events and all(e.cycle is not None for e in kv_events)
+    assert max(e.cycle for e in kv_events) > 0
+    res = replay_controller_trace(kv_events)
+    assert res.engine_elapsed_ns > 0
+    assert res.limited_elapsed_ns >= res.elapsed_ns

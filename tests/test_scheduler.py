@@ -235,6 +235,35 @@ def test_scheduler_rejects_oversized_and_unsupported(smoke_model):
         sched.submit(Request(rid=0, prompt=_prompt(60), max_new_tokens=32))
 
 
+def test_engine_config_exposes_codec_and_geometry(smoke_model):
+    """ISSUE 2 satellite: serving deployments pick the codec and engine
+    geometry on EngineConfig instead of inheriting default_codec()."""
+    from repro.memctl import MemCtlConfig
+
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=96, codec="lz4",
+        engine=MemCtlConfig(lanes=8, clock_ghz=1.0, block_bits=16384,
+                            step_cycles=1024),
+    ))
+    assert sched.store.config.codec == "lz4"
+    assert sched.controller.config.codec == "lz4"
+    assert sched.engine.cfg.engine == "lz4"  # lane silicon follows the codec
+    assert sched.engine.cfg.lanes == 8
+    assert sched.engine.cfg.block_bytes == 2048
+    # 512 Gb/s lane at 1 GHz = 64 B/cycle; window = 8 lanes x 64 x 1024
+    assert sched.engine.cfg.lane_bytes_per_cycle == 64.0
+    assert sched.engine.cfg.step_budget_bytes == 8 * 64 * 1024
+    assert sched.engine.report()["silicon"]["lanes"] == 8
+
+    sched.submit(Request(rid=0, prompt=_prompt(20), max_new_tokens=3))
+    sched.run_until_drained()
+    rep = sched.report()
+    for key in ("engine_utilization", "engine_modeled_latency_ns",
+                "engine_deferred_jobs", "engine_queue_depth_p99", "engine"):
+        assert key in rep, key
+
+
 def test_engine_run_matches_scheduler_outputs(smoke_model):
     """run() wrapper and direct scheduler use produce identical greedy text."""
     model, params = smoke_model
