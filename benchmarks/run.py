@@ -3,6 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run           # everything
     PYTHONPATH=src python -m benchmarks.run --only fig7 table4
     PYTHONPATH=src python -m benchmarks.run --fast    # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --smoke   # tiniest configs —
+        CI runs this so every entry point is exercised on each push and
+        benchmark code cannot silently rot (numbers are NOT meaningful)
 """
 
 from __future__ import annotations
@@ -17,18 +20,22 @@ MODULES = [
     ("table1", "benchmarks.table1_naive_compression", {}),
     ("fig7", "benchmarks.fig7_kv_clustering",
      {"fast": dict(n_layers=8, tokens=1024, channels=512),
-      "full": dict(n_layers=16, tokens=2048, channels=768)}),
+      "full": dict(n_layers=16, tokens=2048, channels=768),
+      "smoke": dict(n_layers=2, tokens=256, channels=128)}),
     ("table3", "benchmarks.table3_weight_compression", {}),
     ("fig8", "benchmarks.fig8_bitplane_compressibility", {}),
-    ("table2", "benchmarks.table2_dynquant_quality", {"fast": dict(eval_tokens=16)}),
+    ("table2", "benchmarks.table2_dynquant_quality",
+     {"fast": dict(eval_tokens=16), "smoke": dict(eval_tokens=8)}),
     ("fig9", "benchmarks.fig9_precision_distribution", {}),
     ("fig10", "benchmarks.fig10_dram_energy", {}),
     ("fig11", "benchmarks.fig11_load_latency", {}),
     ("table4", "benchmarks.table4_hardware_cost", {}),
     ("serving", "benchmarks.serving_throughput",
-     {"fast": dict(n_requests=8, rate=0.8, max_steps=200)}),
+     {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
+      "smoke": dict(n_requests=5, rate=0.8, max_steps=100)}),
     ("engine_util", "benchmarks.engine_utilization",
-     {"fast": dict(n_requests=6, rate=0.8, max_steps=150)}),
+     {"fast": dict(n_requests=6, rate=0.8, max_steps=150),
+      "smoke": dict(n_requests=4, rate=0.8, max_steps=80)}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]
@@ -38,6 +45,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiniest configs, few steps (CI entry-point check)")
     ap.add_argument("--json", default=None, help="dump results as JSON")
     args = ap.parse_args(argv)
 
@@ -45,7 +54,14 @@ def main(argv=None) -> int:
     for name, modpath, opts in MODULES:
         if args.only and name not in args.only:
             continue
-        kwargs = opts.get("fast", {}) if args.fast else opts.get("full", {})
+        if args.smoke:
+            # smallest knobs known for the module; modules without size
+            # knobs run as-is (they are already CI-sized)
+            kwargs = opts.get("smoke", opts.get("fast", {}))
+        elif args.fast:
+            kwargs = opts.get("fast", {})
+        else:
+            kwargs = opts.get("full", {})
         t0 = time.time()
         try:
             mod = __import__(modpath, fromlist=["run"])

@@ -1,11 +1,22 @@
-"""Serving throughput under load: continuous batching vs one-shot batching.
+"""Serving throughput under load: admission modes and batching modes.
 
 Drives the continuous-batching scheduler with a Poisson arrival trace of
-mixed-length requests and reports decode tokens/s, batch occupancy, and the
-KV capacity/bandwidth savings the compressed store + dynamic-quantization
-ladder deliver at steady state (normalised per 1k requests).  The one-shot
-comparison runs the same workload in fixed admission waves, which is what
-the seed engine did — every wave decodes to its longest request.
+mixed-length requests and reports decode tokens/s, batch occupancy, prefill
+compile count / wall time, and the KV capacity/bandwidth savings the
+compressed store + dynamic-quantization ladder deliver at steady state
+(normalised per 1k requests).  Three modes, each on a FRESH model object so
+prefill numbers include its own compiles (that is the point of bucketing):
+
+* ``bucketed``   — chunked prefill over power-of-two length buckets
+  (<= log2(max_ctx) compiles, pad-free accounting; ISSUE 3 tentpole).
+* ``left-pad``   — the legacy pad-to-``prefill_align`` admission: one
+  compile per distinct padded prompt length, pad KV stored and charged.
+* ``one-shot waves`` — left-pad admission AND fixed admission waves (the
+  seed engine's behaviour): every wave decodes to its longest request.
+
+Savings are quoted over pad-free logical bytes only — the left-pad rows
+inflate ``prefill_tokens`` and the store traffic, which is visible in the
+table instead of flattering it.
 
     PYTHONPATH=src python -m benchmarks.run --only serving
 """
@@ -23,7 +34,7 @@ def _mixed_requests(n, seed, vocab, max_new_choices=(4, 8, 16, 24)):
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
-        plen = int(rng.integers(16, 96))
+        plen = int(rng.integers(8, 120))
         reqs.append(Request(
             rid=i,
             prompt=rng.integers(0, vocab, plen).astype(np.int32),
@@ -71,6 +82,8 @@ def _run_waves(model, params, cfg, reqs, max_steps=None):
 
 def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0,
         max_steps: int | None = None):
+    import dataclasses
+
     import jax
 
     from repro.configs.base import get_config
@@ -79,34 +92,42 @@ def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0,
     from repro.serving import EngineConfig
 
     cfg_m = get_config("smollm-135m", smoke=True)
-    model = build_model(cfg_m)
-    params = model.init(jax.random.PRNGKey(0))
+    params = build_model(cfg_m).init(jax.random.PRNGKey(0))
     ladder = PrecisionLadder([(4, 16), (4, 12), (-1, 8)])
-    cfg = EngineConfig(max_batch=4, max_ctx=256, ladder=ladder,
-                       max_stored_bytes=128 * 1024)
+    base_cfg = EngineConfig(max_batch=4, max_ctx=256, ladder=ladder,
+                            max_stored_bytes=128 * 1024)
 
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, n_requests)
     arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
 
-    # warm the shared jit cache so neither measured mode pays compile time
-    warm = _run_continuous(model, params, cfg,
-                           _mixed_requests(2, seed + 1, cfg_m.vocab),
-                           np.zeros(2, np.int64))
-    del warm
+    def fresh(mode):
+        # a fresh Model object = a cold jit cache, so each mode pays (and
+        # reports) exactly its own prefill compiles
+        return build_model(cfg_m), dataclasses.replace(base_cfg,
+                                                       prefill_mode=mode)
 
-    cont = _run_continuous(model, params, cfg,
-                           _mixed_requests(n_requests, seed, cfg_m.vocab),
-                           arrivals, max_steps=max_steps)
+    model, cfg = fresh("bucketed")
+    bucketed = _run_continuous(model, params, cfg,
+                               _mixed_requests(n_requests, seed, cfg_m.vocab),
+                               arrivals, max_steps=max_steps)
+    model, cfg = fresh("padded")
+    leftpad = _run_continuous(model, params, cfg,
+                              _mixed_requests(n_requests, seed, cfg_m.vocab),
+                              arrivals, max_steps=max_steps)
+    model, cfg = fresh("padded")
     wave = _run_waves(model, params, cfg,
                       _mixed_requests(n_requests, seed, cfg_m.vocab),
                       max_steps=max_steps)
 
     rows = []
     out = {}
-    for name, rep in (("continuous", cont), ("one-shot waves", wave)):
+    for name, rep in (("bucketed", bucketed), ("left-pad", leftpad),
+                      ("one-shot waves", wave)):
         rows.append([
             name,
+            f"{rep['prefill_compiles']:.0f}",
+            f"{rep['prefill_s']:.2f}s",
             f"{rep.get('decode_tok_per_s', 0):.1f}",
             f"{rep['decode_steps']:.0f}",
             pct(rep.get("mean_batch_occupancy", 0)),
@@ -115,6 +136,9 @@ def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0,
             f"{rep['kv_evictions']:.0f}",
         ])
         out[name] = {
+            "prefill_compiles": rep["prefill_compiles"],
+            "prefill_s": rep["prefill_s"],
+            "prefill_tokens": rep["prefill_tokens"],
             "decode_tok_per_s": rep.get("decode_tok_per_s", 0),
             "decode_steps": rep["decode_steps"],
             "occupancy": rep.get("mean_batch_occupancy", 0),
@@ -122,10 +146,18 @@ def run(n_requests: int = 24, rate: float = 0.6, seed: int = 0,
             "kv_bandwidth_saving": rep.get("kv_bandwidth_saving", 0),
             "per_1k_requests": rep.get("per_1k_requests", {}),
         }
-    print(fmt_table(rows, ["mode", "tok/s", "steps", "occupancy",
-                           "KV capacity", "KV bandwidth", "evictions"]))
-    steps_c, steps_w = cont["decode_steps"], wave["decode_steps"]
-    print(f"\n[serving] continuous batching: {steps_c:.0f} decode steps vs "
+    print(fmt_table(rows, ["mode", "compiles", "prefill", "tok/s", "steps",
+                           "occupancy", "KV capacity", "KV bandwidth",
+                           "evictions"]))
+    steps_c, steps_w = bucketed["decode_steps"], wave["decode_steps"]
+    print(f"\n[serving] bucketed admission: "
+          f"{bucketed['prefill_compiles']:.0f} prefill compiles vs "
+          f"{leftpad['prefill_compiles']:.0f} left-pad "
+          f"({bucketed['prefill_s']:.2f}s vs {leftpad['prefill_s']:.2f}s "
+          f"prefill); pad-free prefill tokens "
+          f"{bucketed['prefill_tokens']:.0f} vs "
+          f"{leftpad['prefill_tokens']:.0f}")
+    print(f"[serving] continuous batching: {steps_c:.0f} decode steps vs "
           f"{steps_w:.0f} one-shot ({pct(1 - steps_c / max(1, steps_w))} fewer); "
           f"retire-at-own-step reclaims the padded-decode waste")
     return out

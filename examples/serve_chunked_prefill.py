@@ -1,0 +1,75 @@
+"""Bucketed chunked-prefill admission under mixed-length traffic (ISSUE 3).
+
+Shows the admission path end to end: prompts decompose into power-of-two
+page-aligned chunks (at most log2(max_ctx) prefill compiles, ever), a long
+prompt joins the batch chunk-by-chunk while other slots keep decoding, and
+the compressed tier stores exact-length tail pages so capacity/bandwidth
+savings are quoted over pad-free logical bytes only.
+
+    PYTHONPATH=src python examples/serve_chunked_prefill.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs.base import get_config
+from repro.core.quantization import PrecisionLadder
+from repro.models.model import build_model
+from repro.serving import ContinuousScheduler, EngineConfig, Request
+from repro.serving.scheduler import chunk_schedule, prefill_buckets
+
+
+def main():
+    cfg_m = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg_m)
+    params = model.init(jax.random.PRNGKey(0))
+
+    cfg = EngineConfig(
+        max_batch=4,
+        max_ctx=256,
+        ladder=PrecisionLadder([(4, 16), (4, 12), (-1, 8)]),
+        prefill_mode="bucketed",       # the default; "padded" = legacy
+        prefill_chunks_per_step=1,     # admission/decode overlap knob
+    )
+    sched = ContinuousScheduler(model, params, cfg)
+
+    buckets = prefill_buckets(cfg.max_ctx)
+    print(f"bucket set for max_ctx={cfg.max_ctx}: {buckets}")
+    for n in (13, 37, 90, 200):
+        print(f"  {n:>3}-token prompt -> chunks {chunk_schedule(n, buckets)}")
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg_m.vocab, int(n)).astype(np.int32),
+                max_new_tokens=12)
+        for i, n in enumerate([20, 180, 45, 97, 16, 130])
+    ]
+    # stagger arrivals so long prompts join an already-decoding batch
+    arrivals = [0, 1, 1, 3, 5, 6]
+    nxt = 0
+    while nxt < len(reqs) or sched.has_work():
+        while nxt < len(reqs) and arrivals[nxt] <= sched.step_count:
+            sched.submit(reqs[nxt])
+            nxt += 1
+        sched.step()
+
+    rep = sched.report()
+    print(f"\nprefill: {rep['prefill_tokens']:.0f} tokens (pad-free) in "
+          f"{rep['prefill_chunks']:.0f} chunks, "
+          f"{rep['prefill_compiles']:.0f} compiled variants "
+          f"(bound: log2({cfg.max_ctx}) = {int(np.log2(cfg.max_ctx))})")
+    print(f"decode:  {rep['decode_tokens']:.0f} tokens over "
+          f"{rep['decode_steps']:.0f} steps, "
+          f"occupancy {100 * rep['mean_batch_occupancy']:.0f}%")
+    print(f"KV:      capacity saving {100 * rep.get('kv_capacity_saving', 0):.1f}%, "
+          f"bandwidth saving {100 * rep.get('kv_bandwidth_saving', 0):.1f}% "
+          f"(quoted over pad-free logical bytes)")
+    for r in reqs:
+        tail = " (truncated at ctx)" if r.truncated else ""
+        print(f"  rid={r.rid} prompt={len(r.prompt):>3} admitted@{r.admit_step} "
+              f"finished@{r.finish_step} tokens={len(r.output)}{tail}")
+
+
+if __name__ == "__main__":
+    main()

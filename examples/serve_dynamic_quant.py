@@ -66,7 +66,7 @@ def main():
     next_req = 0
     while next_req < n_requests or sched.has_work():
         while next_req < n_requests and arrivals[next_req] <= sched.step_count:
-            sched.submit(reqs[next_req], rng_seed=7 if next_req == 0 else None)
+            sched.submit(reqs[next_req], rng_seed=7)  # re-keys each stream
             next_req += 1
         retired = sched.step()
         for r in retired:

@@ -77,6 +77,18 @@ class CompressedTensor:
     #: compressed chunks of plane p's cross-group concatenated stream
     #: (eq. 5); weights/raw layouts stay segment-major: segments[s][p].
     plane_major: bool = False
+    #: element count the *caller* actually asked to store (KV tail pages are
+    #: physically padded to PAGE_TOKENS by repeating the last token, but the
+    #: pad rows are not logical data and must not inflate capacity/bandwidth
+    #: savings); None = every stored value is logical (the common case)
+    valid_values: int | None = None
+
+    @property
+    def valid_logical_bytes(self) -> int:
+        """Pad-free logical bytes — what the compute fabric truly asked for.
+        Savings ratios are quoted against this, never the padded size."""
+        n = self.n_values if self.valid_values is None else self.valid_values
+        return n * self.spec.bits // 8
 
     @property
     def stored_bytes(self) -> int:

@@ -128,20 +128,29 @@ class MemoryController:
 
     # ------------------------------------------------------------------- KV
     def write_kv_page(
-        self, key: tuple, kv: np.ndarray, spec: FloatSpec
+        self, key: tuple, kv: np.ndarray, spec: FloatSpec,
+        valid_values: int | None = None,
     ) -> CompressedTensor:
-        """key: (layer, head_group, page_index); kv: (tokens, channels)."""
+        """key: (layer, head_group, page_index); kv: (tokens, channels).
+
+        ``valid_values`` marks how many leading elements of ``kv`` are real
+        data when a tail page arrives physically padded to the page size —
+        the event's logical bytes (and every later read of this page) are
+        quoted pad-free, so padding never inflates the savings ratios."""
         ct = compress_kv(kv, spec, self.config)
+        ct.valid_values = valid_values
         self._kv_pages[key] = ct
         self._log(
-            AccessEvent("kv_write", str(key), ct.logical_bytes, ct.stored_bytes)
+            AccessEvent("kv_write", str(key), ct.valid_logical_bytes,
+                        ct.stored_bytes)
         )
         return ct
 
     def _log_kv_read(self, key: tuple, planes: int | None) -> tuple:
         ct = self._kv_pages[key]
         fetched = ct.fetch_bytes(planes)
-        self._log(AccessEvent("kv_read", str(key), ct.logical_bytes, fetched, planes))
+        self._log(AccessEvent("kv_read", str(key), ct.valid_logical_bytes,
+                              fetched, planes))
         return ct, fetched
 
     def read_kv_page(self, key: tuple, planes: int | None = None) -> np.ndarray:
@@ -172,7 +181,7 @@ class MemoryController:
         w = sum(ct.stored_bytes for ct in self._weights.values())
         wl = sum(ct.logical_bytes for ct in self._weights.values())
         k = sum(ct.stored_bytes for ct in self._kv_pages.values())
-        kl = sum(ct.logical_bytes for ct in self._kv_pages.values())
+        kl = sum(ct.valid_logical_bytes for ct in self._kv_pages.values())
         return {
             "weights_logical": wl,
             "weights_stored": w,

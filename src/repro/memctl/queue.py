@@ -40,6 +40,11 @@ class Job:
     key: Hashable = None
     #: sequence id for cancel-on-retire (None = never cancelled)
     seq_id: Optional[int] = None
+    #: deferred sizing: when set, the runtime calls it ONCE — at service
+    #: start, not submit time — to resolve ``nbytes``.  Decode fetches use
+    #: this so a ladder re-assignment between submit and service cannot make
+    #: the lane-pool bytes and the controller's kv_read charge disagree.
+    size_fn: Optional[Callable[[], int]] = None
     submit_step: int = 0
     submit_cycle: int = 0
     remaining: int = 0  # bytes still to service (partial-service carryover)

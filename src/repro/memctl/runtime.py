@@ -80,6 +80,12 @@ class CompressionEngineRuntime:
             job = self.queue.peek()
             if job is None:
                 break
+            if job.size_fn is not None:
+                # deferred sizing: resolve bytes (and any caller-side
+                # context, e.g. the ladder plane count) exactly once, the
+                # moment service begins
+                job.nbytes = job.remaining = max(0, int(job.size_fn()))
+                job.size_fn = None
             take = job.remaining
             if not math.isinf(budget):
                 take = min(take, int(budget - spent))

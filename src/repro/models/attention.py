@@ -459,6 +459,15 @@ def attn_apply(
         # Continuous batching: per-sequence cache lengths (B,).  Each batch
         # row appends its token at its own slot; kv_valid is per-row, so
         # retired/empty slots simply mask to nothing.  Decode (S == 1) only.
+        #
+        # Contract with chunked prefill (lm_prefill_chunk): a row that is
+        # still mid-prefill participates in this batched append with a dummy
+        # token — its garbage k/v lands exactly at row cache_len[i] ==
+        # prefill_pos, which the NEXT prefill chunk overwrites (chunks cover
+        # [pos, pos+C)), and no other row can read it because attention is
+        # row-independent and kv_valid masks it for every real query.  The
+        # chunk path itself reuses the scalar prefill-append branch below on
+        # a one-row slice of this cache.
         assert x.shape[1] == 1, "per-slot cache lengths are a decode-only path"
         ck, cv = cache
         rows = jnp.arange(ck.shape[0])

@@ -34,6 +34,11 @@ class Model:
     prefill: Callable[[Any, dict], tuple]
     decode: Callable[[Any, jnp.ndarray, Any], tuple]
     init_cache: Callable[..., Any]
+    #: (params, tokens (1, C), cache, slot, start, last_idx) ->
+    #: (logits, cache) — bucketed chunked prefill into one serving slot's
+    #: rows (dense-cache families only; None elsewhere).  The continuous
+    #: scheduler compiles one variant per power-of-two bucket size C.
+    prefill_chunk: Callable[..., tuple] | None = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -49,6 +54,9 @@ def build_model(cfg: ModelConfig) -> Model:
             decode=lambda p, t, c: T.lm_decode(p, cfg, t, c),
             init_cache=lambda batch, max_len, dtype=None: T.init_decode_cache(
                 cfg, batch, max_len, dtype
+            ),
+            prefill_chunk=lambda p, t, c, slot, start, last: T.lm_prefill_chunk(
+                p, cfg, t, c, slot, start, last
             ),
         )
     if fam == "ssm":

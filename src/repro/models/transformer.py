@@ -234,6 +234,52 @@ def lm_prefill(params, cfg, batch):
     return logits.astype(jnp.float32), cache
 
 
+def lm_prefill_chunk(params, cfg, tokens, cache, slot, start, last_idx):
+    """Bucketed chunked prefill: append one prompt chunk into one slot's
+    rows of the serving batch cache (continuous batching, ISSUE 3).
+
+    tokens: (1, C) int32 — C is a power-of-two bucket size, so the serving
+    scheduler compiles at most ``log2(max_ctx)`` prefill variants instead of
+    one per distinct prompt length.  A ragged final chunk arrives
+    right-padded to its bucket; the pad tokens sit at positions *after*
+    every real token, so causal masking keeps them out of all real rows'
+    attention, and the scheduler's true ``cache["len"]`` keeps decode from
+    ever attending to them.
+
+    cache: the batch cache {"k","v": (L, B, Smax, Hkv, hd), "len": (B,)}.
+    slot / start / last_idx: traced scalars — the slot row, the absolute
+    position of ``tokens[0]``, and the chunk-local index of the last *real*
+    token (C-1 except on a padded final chunk).  Tracing them means one
+    compile covers every slot/offset/length at a given bucket size.
+
+    Returns ``(logits (1, Vpad) at last_idx, cache)`` with rows
+    [start, start+C) of ``slot`` replaced and everything else untouched —
+    the chunk attends to the slot's rows [0, start) (flash prefill-append
+    path in models/attention), so interleaving chunks with batched decode
+    steps of *other* slots is safe.
+    """
+    ksl = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
+    vsl = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
+    x = embed_apply(params["embed"], tokens)
+    c = x.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    pos = start + jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (1, c))
+    x, new_kv, _ = run_stack(
+        params, cfg, x, pos,
+        cache={"k": ksl, "v": vsl, "len": start}, remat=False,
+    )
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    x_last = rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x_last, head_weight(params))[:, 0]
+    k_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], new_kv["k"], slot, axis=1
+    )
+    v_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], new_kv["v"], slot, axis=1
+    )
+    return logits.astype(jnp.float32), {**cache, "k": k_new, "v": v_new}
+
+
 def lm_decode(params, cfg, token, cache):
     """token: (B,) int32; cache from prefill or init_decode_cache.
 

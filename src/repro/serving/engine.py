@@ -3,11 +3,12 @@ scheduler.
 
 The original engine ran one synchronous batch (pad to the longest prompt,
 decode everyone to the longest ``max_new_tokens``).  The serving loop now
-lives in :mod:`repro.serving.scheduler` — an admission queue, per-step slot
-map and in-flight join/retire, with compressed-KV eviction under a byte
-budget.  ``ServingEngine.run()`` keeps the old call shape as a thin
-submit + drain wrapper so existing callers (tests, examples, benchmarks)
-keep working; new callers should drive the scheduler directly:
+lives in :mod:`repro.serving.scheduler` — an admission queue with bucketed
+chunked prefill, per-step slot map and in-flight join/retire, with
+compressed-KV eviction under a byte budget.  ``ServingEngine.run()`` keeps
+the old call shape as a thin submit + drain wrapper so existing callers
+(tests, examples, benchmarks) keep working; new callers should drive the
+scheduler directly:
 
     eng = ServingEngine(model, params, EngineConfig(...))
     eng.scheduler.submit(Request(...))   # any time, any step
@@ -42,15 +43,21 @@ class ServingEngine:
     def stats(self):
         return self.scheduler.stats
 
-    def run(self, reqs: List[Request], rng_seed: int = 0) -> List[Request]:
+    def run(self, reqs: List[Request],
+            rng_seed: int | None = None) -> List[Request]:
         """Submit a batch and drain the scheduler (legacy one-shot shape).
 
-        Unlike the seed engine, short requests retire at their own step and
-        free their slot + pages immediately; the return order is the input
-        order, all requests done."""
+        An explicit ``rng_seed`` re-keys EVERY request's sampling stream
+        (``fold_in(PRNGKey(rng_seed), rid)``) — a seed sweep through this
+        compat path varies the whole run, while each stream stays
+        independent of batch composition; ``None`` (default) leaves the
+        streams on ``EngineConfig.rng_seed``.  Unlike the seed engine,
+        short requests retire at their own step and free their slot +
+        pages immediately; the return order is the input order, all
+        requests done."""
         assert len(reqs) <= self.cfg.max_batch
-        for i, r in enumerate(reqs):
-            self.scheduler.submit(r, rng_seed=rng_seed if i == 0 else None)
+        for r in reqs:
+            self.scheduler.submit(r, rng_seed=rng_seed)
         self.scheduler.run_until_drained()
         return reqs
 

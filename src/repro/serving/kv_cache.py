@@ -40,18 +40,21 @@ PAGE_TOKENS = 16
 
 
 def iter_page_chunks(kv: np.ndarray, first_page: int = 0):
-    """Yield ``(page_idx, chunk)`` page-splits of ``kv`` (tokens, channels);
-    the tail page is padded by repeating the last token, so the pad never
-    pollutes the delta-decorrelation stats.  Shared by direct store puts
+    """Yield ``(page_idx, chunk, valid_tokens)`` page-splits of ``kv``
+    (tokens, channels); the tail page is padded by repeating the last token,
+    so the pad never pollutes the delta-decorrelation stats, and
+    ``valid_tokens`` records how many leading rows are real data so the
+    store's logical accounting stays pad-free.  Shared by direct store puts
     and the scheduler's engine-queued writes — one definition of page
     padding semantics."""
     t = kv.shape[0]
     for p in range(-(-t // PAGE_TOKENS)):
         chunk = kv[p * PAGE_TOKENS : (p + 1) * PAGE_TOKENS]
-        if chunk.shape[0] < PAGE_TOKENS:
-            pad = np.repeat(chunk[-1:], PAGE_TOKENS - chunk.shape[0], axis=0)
+        valid = chunk.shape[0]
+        if valid < PAGE_TOKENS:
+            pad = np.repeat(chunk[-1:], PAGE_TOKENS - valid, axis=0)
             chunk = np.concatenate([chunk, pad])
-        yield first_page + p, chunk
+        yield first_page + p, chunk, valid
 
 
 @dataclasses.dataclass
@@ -102,16 +105,24 @@ class CompressedKVStore:
 
     # ------------------------------------------------------------------ pages
     def put_page(self, key: PageKey, kv: np.ndarray,
-                 planes: int | None = None) -> None:
-        """kv: (PAGE_TOKENS, channels) in the store's value dtype."""
+                 planes: int | None = None,
+                 valid_tokens: int | None = None) -> None:
+        """kv: (PAGE_TOKENS, channels) in the store's value dtype.
+
+        ``valid_tokens`` < PAGE_TOKENS marks an exact-length tail page: the
+        trailing rows are physical padding (repeats of the last real token)
+        and are excluded from the logical-byte accounting."""
         assert kv.shape[0] == PAGE_TOKENS, kv.shape
         kt = key.astuple()
         if kt in self._lru:
             self._forget(kt)
-        ct = self.controller.write_kv_page(kt, kv, self.spec)
+        valid_values = (None if valid_tokens is None or valid_tokens >= PAGE_TOKENS
+                        else valid_tokens * int(np.prod(kv.shape[1:])))
+        ct = self.controller.write_kv_page(kt, kv, self.spec,
+                                           valid_values=valid_values)
         self._lru[kt] = ct.stored_bytes
         self._planes[kt] = planes
-        self._logical += ct.logical_bytes
+        self._logical += ct.valid_logical_bytes
         self._stored += ct.stored_bytes
         self._enforce_budget(protect=kt)
 
@@ -143,17 +154,29 @@ class CompressedKVStore:
     def contains(self, key: PageKey) -> bool:
         return key.astuple() in self._lru
 
-    def fetch_engine_bytes(self, key: PageKey) -> int:
-        """Decompressed-side bytes the engine must produce for this page's
-        default (ladder-hinted) fetch — the memctl lane pool's job size.
-        Lane throughput is rated on the decompressed side (512 Gb/s), so a
-        partial-plane fetch costs planes/bits of the logical page."""
+    def note_miss(self) -> None:
+        """Record a fetch that found its page already evicted — for callers
+        that detect the miss via :meth:`contains` instead of tripping
+        ``_require`` (the engine's service-time fetch sizing), so the
+        store's hit/miss counters agree with the scheduler's."""
+        self.counters["misses"] += 1
+
+    def fetch_plan(self, key: PageKey) -> Tuple[int, int]:
+        """(engine bytes, plane count) for a fetch resolved *now*.
+
+        The memctl runtime calls this once, at service start (via the job's
+        ``size_fn``), so the lane-pool bytes and the controller's kv_read
+        charge always use the same ladder assignment even when the ladder
+        re-ranks between submit and service.  Lane throughput is rated on
+        the decompressed side (512 Gb/s), so a partial-plane fetch costs
+        planes/bits of the pad-free logical page."""
         kt = key.astuple()
         ct = self.controller.kv_page(kt)
         keep = self._planes.get(kt)
         if keep is None:
-            return ct.logical_bytes
-        return max(1, round(ct.logical_bytes * keep / ct.spec.bits))
+            return ct.valid_logical_bytes, ct.spec.bits
+        return (max(1, round(ct.valid_logical_bytes * keep / ct.spec.bits)),
+                keep)
 
     # -------------------------------------------------------------- sequences
     def put_sequence(self, seq_id: int, layer: int, stream: str, kv: np.ndarray,
@@ -163,9 +186,9 @@ class CompressedKVStore:
         ``first_page`` offsets the page index — the scheduler streams decode
         pages into the store incrementally as each fills."""
         n_pages = 0
-        for p, chunk in iter_page_chunks(kv, first_page):
+        for p, chunk, valid in iter_page_chunks(kv, first_page):
             self.put_page(PageKey(seq_id, layer, p, stream), chunk,
-                          planes=planes)
+                          planes=planes, valid_tokens=valid)
             n_pages += 1
         return n_pages
 
@@ -199,7 +222,7 @@ class CompressedKVStore:
         ct = self.controller.drop_kv_page(kt)
         self._stored -= stored
         if ct is not None:
-            self._logical -= ct.logical_bytes
+            self._logical -= ct.valid_logical_bytes
 
     def _enforce_budget(self, protect: Tuple) -> None:
         if self.max_stored_bytes is None:
@@ -220,8 +243,12 @@ class CompressedKVStore:
             self.counters["evicted_bytes"] += stored
             if self.engine is not None:
                 # the engine streams the victim's compressed bytes out to
-                # the capacity tier: background lane occupancy, no bus event
-                self.engine.submit_eviction(victim, stored, seq_id=victim[0])
+                # the capacity tier: background lane occupancy, no bus event.
+                # seq_id=None: the stream-out is committed work the moment
+                # the page is evicted — it must complete even if the owning
+                # sequence retires first, so retirement's cancel_seq must
+                # not drop it (the drain loop services the backlog instead)
+                self.engine.submit_eviction(victim, stored, seq_id=None)
 
     # ------------------------------------------------------------ accounting
     def footprint(self) -> dict:

@@ -23,3 +23,20 @@ def sample(key, logits: jnp.ndarray, cfg: SamplerConfig) -> jnp.ndarray:
         kth = jax.lax.top_k(logits, cfg.top_k)[0][:, -1:]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(keys, draws, logits: jnp.ndarray,
+                 cfg: SamplerConfig) -> jnp.ndarray:
+    """Per-slot sampling streams for continuous batching.
+
+    Row ``i`` draws token number ``draws[i]`` of its *own* stream
+    ``fold_in(keys[i], draws[i])``, so a request's sampled tokens depend
+    only on its stream key and position — never on batch composition, other
+    requests' seeds, or when neighbours join/retire.
+
+    keys: (B,) stacked PRNG keys; draws: (B,) int; logits (B, V) fp32.
+    """
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    ks = jax.vmap(jax.random.fold_in)(keys, jnp.asarray(draws))
+    return jax.vmap(lambda k, l: sample(k, l[None], cfg)[0])(ks, logits)

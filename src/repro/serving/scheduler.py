@@ -6,27 +6,48 @@ compressed store was dropped wholesale at the end.  This module replaces that
 with the serving loop the paper's accounting actually pays off in:
 
 * **Admission queue + slot map.**  ``submit()`` enqueues requests;
-  every ``step()`` first admits waiting requests into free slots (one
-  single-sequence prefill each), then runs ONE batched decode step over all
-  active slots, then retires requests that hit their own ``max_new_tokens``
-  — a short request frees its slot (and its KV pages) the step it finishes
-  instead of riding along with the longest request.
+  every ``step()`` first admits waiting requests into free slots, then runs
+  ONE batched decode step over all active slots, then retires requests that
+  hit their own ``max_new_tokens`` — a short request frees its slot (and its
+  KV pages) the step it finishes instead of riding along with the longest
+  request.
+
+* **Bucketed chunked prefill (ISSUE 3).**  Admission no longer left-pads the
+  prompt to an alignment and runs one monolithic prefill per distinct padded
+  length (one ``jax.jit`` compile each).  Prompts are processed in
+  page-aligned chunks whose sizes come from a power-of-two bucket set, so at
+  most ``log2(max_ctx)`` prefill variants ever compile; each chunk appends
+  directly into the slot's rows (``models.transformer.lm_prefill_chunk``)
+  and ``cache["len"]`` holds the TRUE prompt length — no pad token is ever
+  attended to, stored, ladder-ranked, or charged through the engine.
+  Chunking also overlaps admission with decode: while other slots decode, a
+  joining prompt advances ``prefill_chunks_per_step`` chunks per step
+  (double-buffered slot join), so a long admission never stalls the batch.
+  The legacy left-pad path survives as ``prefill_mode="padded"`` — the
+  baseline the serving benchmark compares against.
 
 * **Per-slot cache lengths.**  The device KV cache is one fixed
   (L, max_batch, max_ctx, Hkv, hd) buffer; ``cache["len"]`` is a (B,) vector
   so each slot decodes at its own position against its own valid prefix
   (models/attention per-row append path).
 
+* **Per-request sampling streams.**  The scheduler holds ONE base PRNG key
+  (``EngineConfig.rng_seed``); request ``rid`` samples from
+  ``fold_in(base, rid)`` with a per-request draw counter, so a request's
+  tokens never depend on batch composition or on seeds passed for other
+  requests mid-flight.
+
 * **Compressed tier under memory pressure.**  Every page a sequence
-  completes (prefill pages at admission, decode pages as they fill) is
+  completes (prefill pages as chunks land, decode pages as they fill) is
   written through :class:`~repro.serving.kv_cache.CompressedKVStore`, whose
-  ``max_stored_bytes`` budget LRU-evicts cold pages.  Each decode step
-  charges the bandwidth of fetching every resident page of every active slot
-  at its ladder-assigned plane count (Fig. 5 partial-plane fetch) through
-  the shared :class:`~repro.core.controller.MemoryController`; an evicted
-  page that is touched again is re-activated — re-compressed from the device
-  working set (a charged kv_write) — so thrash shows up in the numbers
-  instead of silently disappearing.
+  ``max_stored_bytes`` budget LRU-evicts cold pages.  Ragged prompt tails
+  are stored as exact-length pages (``valid_tokens``), so capacity and
+  bandwidth savings are quoted over pad-free logical bytes only.  Each
+  decode step charges the bandwidth of fetching every stored page of every
+  active slot at its ladder-assigned plane count (Fig. 5 partial-plane
+  fetch); an evicted page that is touched again is re-activated — re-
+  compressed from the device working set (a charged kv_write) — so thrash
+  shows up in the numbers instead of silently disappearing.
 
 * **Quest ladder re-ranking.**  At admission and at every page boundary the
   slot's pages are re-scored against the newest query proxy and the
@@ -39,11 +60,12 @@ with the serving loop the paper's accounting actually pays off in:
   :class:`~repro.memctl.CompressionEngineRuntime` — the paper's 32 x
   512 Gb/s lane engine as a cycle-approximate runtime — and serviced once
   per step in strict priority order (decode fetch > KV write > background
-  re-compress) within the lane pool's per-step byte budget.  Work that
-  does not fit the window spills to later steps: re-activations defer,
-  queue depth grows, and ``report()`` quotes engine utilization and
-  engine-limited latency instead of assuming infinite (de)compression
-  bandwidth.
+  re-compress) within the lane pool's per-step byte budget.  Decode-fetch
+  jobs are *sized at service time* (``Job.size_fn``), so a ladder
+  re-assignment between submit and service cannot make the lane-pool bytes
+  and the controller's kv_read bytes disagree.  ``run_until_drained`` keeps
+  ticking after the last retirement until the engine backlog (e.g. eviction
+  write-backs) empties, so ``report()`` never underquotes utilization.
 
 Scope: families with a plain dense decode cache ({"k","v","len"}; dense/moe,
 full attention, no staging ring).  ``engine.ServingEngine`` keeps the old
@@ -85,7 +107,7 @@ from repro.serving.kv_cache import (
     PageKey,
     iter_page_chunks,
 )
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import SamplerConfig, sample, sample_slots
 
 
 @dataclasses.dataclass
@@ -95,6 +117,12 @@ class Request:
     max_new_tokens: int = 32
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: retired because the context window filled before max_new_tokens —
+    #: ``done`` with fewer tokens than asked, and this says why
+    truncated: bool = False
+    #: per-request sampling seed (None = the scheduler's base stream);
+    #: affects ONLY this request's stream, never in-flight neighbours
+    rng_seed: Optional[int] = None
     # --- scheduler bookkeeping (filled in as the request moves through) ---
     arrival_step: int = -1  # step submit() saw it
     admit_step: int = -1  # step it won a slot
@@ -114,8 +142,8 @@ class EngineConfig:
     max_stored_bytes: Optional[int] = None
     #: cap on layers written through the compressed store (cost cap; None=all)
     store_layers: Optional[int] = 4
-    #: left-pad prompts to a multiple of this (bounds prefill recompiles and
-    #: page-aligns the stored prefill KV); PAGE_TOKENS keeps seed semantics
+    #: legacy left-pad admission alignment — only used by
+    #: ``prefill_mode="padded"``; PAGE_TOKENS keeps seed semantics
     prefill_align: int = PAGE_TOKENS
     #: KV-tier compression codec ('lz4' | 'zstd'); None = default_codec(),
     #: which picks zstd when the optional package is present, else lz4
@@ -125,19 +153,113 @@ class EngineConfig:
     #: unbounded engine; ``engine=None`` on the nested config's ``engine``
     #: field follows ``codec``
     engine: MemCtlConfig = MemCtlConfig()
+    #: 'bucketed' — chunked prefill over power-of-two length buckets
+    #: (<= log2(max_ctx) compiles, pad-free cache/store/accounting);
+    #: 'padded' — the legacy left-pad-to-``prefill_align`` admission
+    #: (one compile per distinct padded length; kept as the benchmark
+    #: baseline)
+    prefill_mode: str = "bucketed"
+    #: chunks each mid-prefill slot advances per step while other slots
+    #: decode (the admission/decode overlap knob); idle schedulers always
+    #: run a joining prompt to completion in one step
+    prefill_chunks_per_step: int = 1
+    #: base sampling seed; request streams are fold_in(PRNGKey(seed), rid)
+    rng_seed: int = 0
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
     pending: int  # next token to feed the decoder (already sampled)
+    prompt: np.ndarray  # (S,) int32 — exact length, never padded
+    #: per-request sampling stream (fold_in(base, rid)); draw i uses
+    #: fold_in(key, i) so the stream is independent of batch composition
+    key: jax.Array = None
+    draws: int = 0  # tokens sampled so far from this stream
+    prefill_pos: int = 0  # prompt tokens already appended to the slot rows
+    prefilling: bool = True  # still consuming prompt chunks (no decode yet)
+    #: device tokens [0, stored_tokens) have been submitted to the
+    #: compressed store (exact-length tail pages included); fetch accounting
+    #: and re-activation range over exactly these pages
+    stored_tokens: int = 0
     #: ladder plane count per page index (filled by _assign_ladder_planes;
     #: consulted on re-activation so evicted pages keep their precision)
     page_planes: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
-#: jitted prefill/decode shared across schedulers of the same model instance,
-#: so compile time is paid once (benchmarks compare modes on equal footing)
+def prefill_buckets(max_ctx: int) -> List[int]:
+    """Power-of-two chunk sizes [PAGE_TOKENS, 2*PAGE_TOKENS, ... <= max_ctx]
+    — the complete set of prefill shapes the scheduler can ever request, so
+    compiles are bounded by log2(max_ctx) regardless of traffic."""
+    out = []
+    b = PAGE_TOKENS
+    while b <= max_ctx:
+        out.append(b)
+        b *= 2
+    return out or [max_ctx]
+
+
+def next_chunk(rem: int, buckets: List[int]) -> tuple:
+    """(bucket, real) for the next prefill chunk of a prompt with ``rem``
+    tokens left: the largest bucket that fits, or the smallest bucket
+    right-padded for the ragged tail.  The single definition both the
+    scheduler's admission loop and :func:`chunk_schedule` use."""
+    fit = [b for b in buckets if b <= rem]
+    bucket = fit[-1] if fit else buckets[0]
+    return bucket, min(bucket, rem)
+
+
+def chunk_schedule(prompt_len: int, buckets: List[int]) -> List[tuple]:
+    """Greedy largest-first decomposition of a prompt into (bucket, real)
+    chunks.  All buckets are page multiples, so every chunk starts page-
+    aligned; only the final chunk may be ragged (real < bucket), and its pad
+    sits AFTER every real token where causality masks it."""
+    out = []
+    rem = int(prompt_len)
+    while rem > 0:
+        bucket, real = next_chunk(rem, buckets)
+        out.append((bucket, real))
+        rem -= real
+    return out
+
+
+def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
+                   key: PageKey, seq_id: int) -> Job:
+    """Decode-critical fetch with SERVICE-TIME sizing.
+
+    The plane count is resolved exactly once — by ``size_fn`` when the
+    engine starts servicing the job — and the completion ``fn`` charges the
+    controller's kv_read at that same resolved count, so the lane-pool
+    bytes and the accounting can never disagree across a ladder
+    re-assignment (or an eviction) that lands between submit and service.
+    """
+    plan: dict = {}
+
+    def size() -> int:
+        if not store.contains(key):
+            store.note_miss()  # keep the store's counters honest too
+            return 0  # evicted since submit; fn counts the scheduler miss
+        nbytes, keep = store.fetch_plan(key)
+        plan["keep"] = keep
+        return nbytes
+
+    def fn() -> None:
+        if "keep" not in plan:
+            stats["kv_fetch_misses"] += 1
+            return
+        try:
+            store.account_fetch(key, keep_planes=plan["keep"])
+        except PageEvictedError:
+            stats["kv_fetch_misses"] += 1
+
+    return Job(JobClass.DECODE_FETCH, 0, fn=fn, key=key.astuple(),
+               seq_id=seq_id, size_fn=size)
+
+
+#: jitted prefill/decode/chunk shared across schedulers of the same model
+#: instance, so compile time is paid once (benchmarks compare modes on
+#: equal footing when they reuse one model object — and build fresh model
+#: objects when they want cold-compile numbers)
 _JIT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
@@ -145,7 +267,9 @@ def _jitted(model: Model):
     try:
         return _JIT_CACHE[model]
     except KeyError:
-        fns = (jax.jit(model.prefill), jax.jit(model.decode))
+        chunk = (jax.jit(model.prefill_chunk)
+                 if model.prefill_chunk is not None else None)
+        fns = (jax.jit(model.prefill), jax.jit(model.decode), chunk)
         _JIT_CACHE[model] = fns
         return fns
 
@@ -169,6 +293,20 @@ class ContinuousScheduler:
         if mcfg.decode_staging > 0:
             raise NotImplementedError(
                 "decode staging rings conflict with per-slot lengths"
+            )
+        if cfg.prefill_mode not in ("bucketed", "padded"):
+            raise ValueError(
+                f"prefill_mode must be 'bucketed' or 'padded', "
+                f"got {cfg.prefill_mode!r}"
+            )
+        if cfg.prefill_mode == "bucketed" and cfg.max_ctx % PAGE_TOKENS != 0:
+            # a ragged final bucket landing near the cache end would be
+            # CLAMPED by dynamic_update_slice and silently overwrite earlier
+            # KV rows; page-multiple max_ctx makes that unreachable (every
+            # chunk start is a page multiple and every bucket fits)
+            raise ValueError(
+                f"bucketed prefill needs max_ctx to be a multiple of "
+                f"PAGE_TOKENS ({PAGE_TOKENS}), got {cfg.max_ctx}"
             )
         self.model = model
         self.params = params
@@ -204,16 +342,25 @@ class ContinuousScheduler:
             config=store_cfg, max_stored_bytes=cfg.max_stored_bytes,
             controller=self.controller, engine=self.engine,
         )
-        self._prefill, self._decode = _jitted(model)
+        self._prefill, self._decode, self._prefill_chunk = _jitted(model)
+        # chunked admission needs the chunk kernel; families without one
+        # (none today among dense/moe) fall back to the padded path
+        self._mode = (cfg.prefill_mode if self._prefill_chunk is not None
+                      else "padded")
+        self._buckets = prefill_buckets(cfg.max_ctx)
+        self._prefill_shapes: set = set()  # distinct compiled variants asked
         self._waiting: Deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * cfg.max_batch
         self._lens = np.zeros(cfg.max_batch, np.int32)
         self._cache = None  # built on first admission
-        self._key = jax.random.PRNGKey(0)
+        self._base_key = jax.random.PRNGKey(cfg.rng_seed)
+        self._zero_key = jax.random.PRNGKey(0)  # filler for idle slot rows
         self.step_count = 0
         self.stats: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0,
+            "prefill_chunks": 0, "prefill_compiles": 0,
             "requests_submitted": 0, "requests_completed": 0,
+            "requests_truncated": 0,
             "decode_steps": 0, "decode_batch_occupancy": 0.0,
             "kv_reactivations": 0,
             "kv_fetch_misses": 0, "kv_fetch_deferrals": 0,
@@ -225,12 +372,15 @@ class ContinuousScheduler:
     # ------------------------------------------------------------------ queue
     def submit(self, req: Request, rng_seed: int | None = None) -> None:
         if rng_seed is not None:
-            self._key = jax.random.PRNGKey(rng_seed)
-        padded = self._padded_len(len(req.prompt))
-        if padded + req.max_new_tokens > self.cfg.max_ctx:
+            # per-REQUEST stream seed: scoped to this request only, so it
+            # cannot disturb the sampling streams of in-flight neighbours
+            req.rng_seed = rng_seed
+        admitted = (len(req.prompt) if self._mode == "bucketed"
+                    else self._padded_len(len(req.prompt)))
+        if len(req.prompt) < 1 or admitted + 1 > self.cfg.max_ctx:
             raise ValueError(
-                f"request {req.rid}: prompt {len(req.prompt)} (padded to "
-                f"{padded}) + {req.max_new_tokens} new tokens exceeds "
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"(admitted as {admitted}) leaves no decode room — exceeds "
                 f"max_ctx {self.cfg.max_ctx}"
             )
         req.arrival_step = self.step_count
@@ -239,19 +389,25 @@ class ContinuousScheduler:
 
     @property
     def active(self) -> int:
+        """Occupied slots (prefilling or decoding)."""
         return sum(s is not None for s in self._slots)
 
     @property
-    def waiting(self) -> int:
-        return len(self._waiting)
+    def decoding(self) -> int:
+        """Slots past prefill, generating tokens."""
+        return sum(s is not None and not s.prefilling for s in self._slots)
 
     def has_work(self) -> bool:
-        return bool(self._waiting) or self.active > 0
+        """Anything left to do — including engine backlog: queued jobs
+        (eviction write-backs, deferred writes) must be serviced before the
+        run's utilization/latency report means anything."""
+        return (bool(self._waiting) or self.active > 0
+                or len(self.engine.queue) > 0)
 
     # ------------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """Admit -> one batched decode step -> engine tick -> retire.
-        Returns the requests retired this step.
+        """Admit -> prefill chunks -> one batched decode step -> engine tick
+        -> retire.  Returns the requests retired this step.
 
         The engine tick is where every (de)compression submitted this step
         — prefill/decode page writes, decode fetches, re-activations — is
@@ -260,7 +416,8 @@ class ContinuousScheduler:
         for slot_id, slot in enumerate(self._slots):
             if slot is None and self._waiting:
                 self._admit(self._waiting.popleft(), slot_id)
-        if self.active == 0:
+        self._prefill_tick()
+        if self.decoding == 0:
             self.engine.tick()    # engine windows track wall steps
             self.step_count += 1  # idle tick: arrival traces keyed on
             return []             # step_count must still advance time
@@ -285,8 +442,80 @@ class ContinuousScheduler:
 
     # -------------------------------------------------------------- admission
     def _admit(self, req: Request, slot_id: int) -> None:
-        cfg = self.cfg
+        if self._cache is None:
+            self._cache = self._build_cache()
         prompt = np.asarray(req.prompt, np.int32)
+        base = (jax.random.PRNGKey(req.rng_seed)
+                if req.rng_seed is not None else self._base_key)
+        self._slots[slot_id] = _Slot(
+            req=req, pending=-1, prompt=prompt,
+            key=jax.random.fold_in(base, req.rid),
+        )
+        self._lens[slot_id] = 0
+        req.admit_step = self.step_count
+        if self._mode == "padded":
+            self._prefill_padded(slot_id)
+
+    def _prefill_tick(self) -> None:
+        """Advance every mid-prefill slot (bucketed mode; the padded path
+        completes inside ``_admit``).  Overlap policy — the double-buffered
+        slot join: while other slots decode, a joining prompt advances only
+        ``prefill_chunks_per_step`` chunks per step so admission never
+        stalls the batch; with nothing decoding, the prompt runs to
+        completion now (nobody is waiting on the step)."""
+        decode_live = self.decoding > 0
+        for slot_id, slot in enumerate(self._slots):
+            if slot is None or not slot.prefilling:
+                continue
+            budget = (max(1, self.cfg.prefill_chunks_per_step)
+                      if decode_live else len(slot.prompt))
+            while slot.prefilling and budget > 0:
+                self._prefill_chunk_once(slot_id)
+                budget -= 1
+
+    def _prefill_chunk_once(self, slot_id: int) -> None:
+        """Run ONE bucketed chunk of this slot's prompt through the chunked
+        prefill kernel, append it into the slot's cache rows, and stream the
+        completed pages to the compressed store.  On the final chunk, sample
+        the first output token from the last REAL position's logits."""
+        slot = self._slots[slot_id]
+        start = slot.prefill_pos
+        bucket, real = next_chunk(len(slot.prompt) - start, self._buckets)
+        tokens = np.empty(bucket, np.int32)
+        tokens[:real] = slot.prompt[start:start + real]
+        if real < bucket:  # ragged tail: pad value is irrelevant (masked)
+            tokens[real:] = slot.prompt[-1]
+
+        t0 = time.time()
+        logits, self._cache = self._prefill_chunk(
+            self.params, jnp.asarray(tokens[None]), self._cache,
+            jnp.int32(slot_id), jnp.int32(start), jnp.int32(real - 1),
+        )
+        logits = jax.block_until_ready(logits)
+        self.stats["prefill_s"] += time.time() - t0
+        self.stats["prefill_tokens"] += real
+        self.stats["prefill_chunks"] += 1
+        self._prefill_shapes.add(("bucket", bucket))
+        self.stats["prefill_compiles"] = len(self._prefill_shapes)
+
+        slot.prefill_pos = start + real
+        self._lens[slot_id] = slot.prefill_pos
+        final = slot.prefill_pos >= len(slot.prompt)
+        if self.cfg.store_kv_compressed:
+            self._store_prefill_pages(slot_id, final=final)
+        if final:
+            slot.prefilling = False
+            slot.pending = self._first_token(slot, logits)
+            if self.cfg.store_kv_compressed:
+                self._assign_ladder_planes(slot_id)
+
+    def _prefill_padded(self, slot_id: int) -> None:
+        """Legacy admission: left-pad to ``prefill_align`` and run one
+        monolithic prefill (one compile per distinct padded length).  Pad
+        KV lands inside ``cache["len"]`` and the store — the inflated
+        baseline ``prefill_mode="bucketed"`` exists to beat."""
+        slot = self._slots[slot_id]
+        prompt = slot.prompt
         s = self._padded_len(len(prompt))
         padded = np.zeros(s, np.int32)
         padded[s - len(prompt):] = prompt  # left-pad (seed semantics)
@@ -298,22 +527,52 @@ class ContinuousScheduler:
         logits = jax.block_until_ready(logits)
         self.stats["prefill_s"] += time.time() - t0
         self.stats["prefill_tokens"] += s
+        self._prefill_shapes.add(("padded", s))
+        self.stats["prefill_compiles"] = len(self._prefill_shapes)
 
-        if self._cache is None:
-            self._cache = self._build_cache()
         # join in flight: copy the prefill KV into this slot's rows
         self._cache["k"] = self._cache["k"].at[:, slot_id, :s].set(pcache["k"][:, 0])
         self._cache["v"] = self._cache["v"].at[:, slot_id, :s].set(pcache["v"][:, 0])
         self._lens[slot_id] = s
-        self._slots[slot_id] = _Slot(req=req, pending=int(jnp.argmax(logits[0])))
-        req.admit_step = self.step_count
+        slot.prefill_pos = s
+        slot.prefilling = False
+        slot.pending = self._first_token(slot, logits)
 
-        if cfg.store_kv_compressed:
+        if self.cfg.store_kv_compressed:
+            rid = slot.req.rid
             k_np, v_np = self._slot_kv_host(slot_id, 0, s)
             for li in range(k_np.shape[0]):
-                self._submit_sequence_writes(slot_id, req.rid, li, "k", k_np[li])
-                self._submit_sequence_writes(slot_id, req.rid, li, "v", v_np[li])
+                self._submit_sequence_writes(slot_id, rid, li, "k", k_np[li])
+                self._submit_sequence_writes(slot_id, rid, li, "v", v_np[li])
+            slot.stored_tokens = s
             self._assign_ladder_planes(slot_id)
+
+    def _first_token(self, slot: _Slot, logits) -> int:
+        """Draw 0 of the slot's own stream (greedy = argmax, as before)."""
+        tok = sample(jax.random.fold_in(slot.key, 0), logits,
+                     self.cfg.sampler)
+        slot.draws = 1
+        return int(np.asarray(tok)[0])
+
+    def _store_prefill_pages(self, slot_id: int, final: bool) -> None:
+        """Stream this slot's newly completed prompt KV to the store: full
+        pages as chunks land; on the final chunk also the ragged tail as an
+        exact-length page (valid_tokens < PAGE_TOKENS), so no pad row is
+        ever stored and logical bytes stay pad-free."""
+        slot = self._slots[slot_id]
+        end = (slot.prefill_pos if final
+               else (slot.prefill_pos // PAGE_TOKENS) * PAGE_TOKENS)
+        if end <= slot.stored_tokens:
+            return
+        rid = slot.req.rid
+        first_page = slot.stored_tokens // PAGE_TOKENS
+        k_np, v_np = self._slot_kv_host(slot_id, slot.stored_tokens, end)
+        for li in range(k_np.shape[0]):
+            self._submit_sequence_writes(slot_id, rid, li, "k", k_np[li],
+                                         first_page=first_page)
+            self._submit_sequence_writes(slot_id, rid, li, "v", v_np[li],
+                                         first_page=first_page)
+        slot.stored_tokens = end
 
     def _build_cache(self):
         cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
@@ -340,64 +599,78 @@ class ContinuousScheduler:
 
     # ----------------------------------------------------------------- decode
     def _decode_step(self) -> None:
-        tok = np.zeros(self.cfg.max_batch, np.int32)
+        b = self.cfg.max_batch
+        tok = np.zeros(b, np.int32)
+        draws = np.zeros(b, np.int64)
+        keys = []
         for i, slot in enumerate(self._slots):
-            if slot is not None:
+            if slot is not None and not slot.prefilling:
                 tok[i] = slot.pending
+                draws[i] = slot.draws
+                keys.append(slot.key)
+            else:
+                # idle or mid-prefill row: dummy token/key; its appended k/v
+                # is masked by kv_valid and overwritten by the next prefill
+                # chunk or admission (see models/attention per-slot path)
+                keys.append(self._zero_key)
         self._cache["len"] = jnp.asarray(self._lens)
 
         t0 = time.time()
-        self._key, sub = jax.random.split(self._key)
         logits, self._cache = self._decode(
             self.params, jnp.asarray(tok), self._cache
         )
-        nxt = np.asarray(sample(sub, logits, self.cfg.sampler))
+        nxt = np.asarray(sample_slots(jnp.stack(keys), draws, logits,
+                                      self.cfg.sampler))
         jax.block_until_ready(nxt)
         self.stats["decode_s"] += time.time() - t0
 
-        n_active = self.active
+        n_dec = self.decoding
         self.stats["decode_steps"] += 1
-        self.stats["decode_batch_occupancy"] += n_active / self.cfg.max_batch
+        self.stats["decode_batch_occupancy"] += n_dec / b
         for i, slot in enumerate(self._slots):
-            if slot is None:
+            if slot is None or slot.prefilling:
                 continue
             slot.req.output.append(slot.pending)
             slot.pending = int(nxt[i])
+            slot.draws += 1
             self._lens[i] += 1
             self.stats["decode_tokens"] += 1
             if self.cfg.store_kv_compressed:
                 ln = int(self._lens[i])
                 if ln % PAGE_TOKENS == 0:  # a decode page just filled
                     self._store_page(i, ln // PAGE_TOKENS - 1)
+                    slot.stored_tokens = ln
                     self._assign_ladder_planes(i)
                 self._account_step_fetch(i)
 
     # -------------------------------------------------- engine job submission
     def _submit_page_write(self, slot_id: int, key: PageKey,
                            chunk: np.ndarray,
-                           klass: JobClass = JobClass.KV_WRITE) -> None:
+                           valid: int = PAGE_TOKENS) -> None:
         """Queue one page's compress-and-store on the engine.  The chunk is
         captured at submit time (the token range is append-only, so it
         cannot change); the store put — and its charged kv_write — happens
         when the engine services the job, at the ladder planes assigned by
-        then."""
+        then.  ``valid`` < PAGE_TOKENS marks an exact-length tail page; the
+        job is sized by its pad-free bytes."""
         slot = self._slots[slot_id]
 
-        def fn(key=key, chunk=chunk, slot=slot):
+        def fn(key=key, chunk=chunk, slot=slot, valid=valid):
             self.store.put_page(key, chunk,
-                                planes=slot.page_planes.get(key.page_idx))
+                                planes=slot.page_planes.get(key.page_idx),
+                                valid_tokens=valid)
 
-        self.engine.submit(Job(klass, chunk.nbytes, fn=fn,
-                               key=key.astuple(), seq_id=key.seq_id))
+        self.engine.submit(Job(JobClass.KV_WRITE, chunk[:valid].nbytes,
+                               fn=fn, key=key.astuple(), seq_id=key.seq_id))
 
     def _submit_sequence_writes(self, slot_id: int, rid: int, layer: int,
                                 stream: str, kv: np.ndarray,
                                 first_page: int = 0) -> None:
         """Page-split ``kv`` (tokens, channels) and queue one write job per
         page (same split/tail-pad as ``CompressedKVStore.put_sequence``)."""
-        for p, chunk in iter_page_chunks(kv, first_page):
+        for p, chunk, valid in iter_page_chunks(kv, first_page):
             self._submit_page_write(
-                slot_id, PageKey(rid, layer, p, stream), chunk
+                slot_id, PageKey(rid, layer, p, stream), chunk, valid=valid
             )
 
     def _store_page(self, slot_id: int, page_idx: int) -> None:
@@ -411,9 +684,10 @@ class ContinuousScheduler:
                                          first_page=page_idx)
 
     def _assign_ladder_planes(self, slot_id: int) -> None:
-        """Re-rank this slot's pages against the newest query proxy and
+        """Re-rank this slot's full pages against the newest query proxy and
         record the ladder's plane count on every stored page (all layers
-        share the last layer's ranking, as the seed engine did)."""
+        share the last layer's ranking, as the seed engine did).  A ragged
+        stored tail page keeps full precision until it fills."""
         ladder = self.cfg.ladder
         if ladder is None:
             return
@@ -440,25 +714,25 @@ class ContinuousScheduler:
     def _account_step_fetch(self, slot_id: int) -> None:
         """Queue this decode step's KV traffic for one slot as
         decode-critical fetch jobs: every stored-resident page at its ladder
-        planes.  Evicted pages queue a background re-activation instead (a
-        re-compress write, charged once when the engine services it —
-        possibly steps later under load); pages whose write or re-activation
-        is still queued are skipped, since their ground truth is still the
-        device working set and no compressed-tier copy exists to fetch."""
+        planes, sized at SERVICE time (see :func:`make_fetch_job`).  Evicted
+        pages queue a background re-activation instead (a re-compress write,
+        charged once when the engine services it — possibly steps later
+        under load); pages whose write or re-activation is still queued are
+        skipped, since their ground truth is still the device working set
+        and no compressed-tier copy exists to fetch.  The page range comes
+        from the slot's ``stored_tokens`` watermark, so a decode-growing
+        tail page that was never stored is not phantom-fetched."""
         slot = self._slots[slot_id]
         rid = slot.req.rid
-        n_pages = int(self._lens[slot_id]) // PAGE_TOKENS
+        n_pages = -(-slot.stored_tokens // PAGE_TOKENS)
         for li in range(self._stored_layers()):
             for stream in ("k", "v"):
                 for p in range(n_pages):
                     key = PageKey(rid, li, p, stream)
                     if self.store.contains(key):
-                        self.engine.submit(Job(
-                            JobClass.DECODE_FETCH,
-                            self.store.fetch_engine_bytes(key),
-                            fn=lambda key=key: self._serviced_fetch(key),
-                            key=key.astuple(), seq_id=rid,
-                        ))
+                        self.engine.submit(
+                            make_fetch_job(self.store, self.stats, key, rid)
+                        )
                     elif (self.engine.pending(key.astuple(), JobClass.KV_WRITE)
                           or self.engine.pending(key.astuple(),
                                                  JobClass.BACKGROUND)):
@@ -469,33 +743,27 @@ class ContinuousScheduler:
                     else:
                         self._reactivate(slot_id, key)
 
-    def _serviced_fetch(self, key: PageKey) -> None:
-        """Engine-serviced decode fetch: charge the kv_read at the ladder
-        planes.  The page may have been evicted between submission and
-        service — count the miss; the next step's fetch pass queues the
-        re-activation."""
-        try:
-            self.store.account_fetch(key)
-        except PageEvictedError:
-            self.stats["kv_fetch_misses"] += 1
-
     def _reactivate(self, slot_id: int, key: PageKey) -> None:
         """An evicted page is needed again: queue a background re-compress
         from the device working set, keeping the plane count the ladder last
         assigned.  The page data is captured at submit time (append-only
         token range) and the kv_write is charged exactly once, when the
-        engine services the job."""
-        t0 = key.page_idx * PAGE_TOKENS
-        k_np, v_np = self._slot_kv_host(slot_id, t0, t0 + PAGE_TOKENS)
-        page = k_np[key.layer] if key.stream == "k" else v_np[key.layer]
+        engine services the job.  A ragged stored tail re-activates at its
+        exact valid length."""
         slot = self._slots[slot_id]
+        t0 = key.page_idx * PAGE_TOKENS
+        valid = min(PAGE_TOKENS, slot.stored_tokens - t0)
+        k_np, v_np = self._slot_kv_host(slot_id, t0, t0 + valid)
+        kv = k_np[key.layer] if key.stream == "k" else v_np[key.layer]
+        _, page, valid = next(iter_page_chunks(kv))
 
-        def fn(key=key, page=page, slot=slot):
+        def fn(key=key, page=page, valid=valid, slot=slot):
             self.store.put_page(key, page,
-                                planes=slot.page_planes.get(key.page_idx))
+                                planes=slot.page_planes.get(key.page_idx),
+                                valid_tokens=valid)
             self.stats["kv_reactivations"] += 1
 
-        self.engine.submit(Job(JobClass.BACKGROUND, page.nbytes, fn=fn,
+        self.engine.submit(Job(JobClass.BACKGROUND, kv.nbytes, fn=fn,
                                key=key.astuple(), seq_id=key.seq_id))
 
     def _note_peaks(self) -> None:
@@ -511,15 +779,22 @@ class ContinuousScheduler:
     def _retire_finished(self) -> List[Request]:
         done = []
         for i, slot in enumerate(self._slots):
-            if slot is None:
+            if slot is None or slot.prefilling:
                 continue
             r = slot.req
             hit_ctx = int(self._lens[i]) >= self.cfg.max_ctx
             if len(r.output) >= r.max_new_tokens or hit_ctx:
                 r.done = True
+                if len(r.output) < r.max_new_tokens:
+                    # context window filled first: fewer tokens than asked,
+                    # and the request says why instead of silently stopping
+                    r.truncated = True
+                    self.stats["requests_truncated"] += 1
                 r.finish_step = self.step_count
                 # queued work for a retired request is dead: cancel before
                 # dropping pages so the engine never services stale jobs
+                # (eviction write-backs carry seq_id=None and survive — the
+                # stream-out is committed work the drain loop services)
                 self.stats["engine_jobs_cancelled"] += (
                     self.engine.cancel_seq(r.rid)
                 )

@@ -296,3 +296,76 @@ def test_engine_cycles_stamp_events_and_replay_quotes_engine_latency(smoke_model
     res = replay_controller_trace(kv_events)
     assert res.engine_elapsed_ns > 0
     assert res.limited_elapsed_ns >= res.elapsed_ns
+
+
+# ---------------------------------------------------------------------------
+# Service-time job sizing (ISSUE 3 bugfix): lane bytes and kv_read agree
+# ---------------------------------------------------------------------------
+
+
+def test_job_size_fn_resolves_at_service_start_not_submit():
+    eng = CompressionEngineRuntime(MemCtlConfig(step_cycles=None))
+    state = {"bytes": 100}
+    job = eng.submit(Job(JobClass.DECODE_FETCH, 0, key="p",
+                         size_fn=lambda: state["bytes"]))
+    state["bytes"] = 40  # world changed between submit and service
+    eng.tick()
+    assert job.nbytes == 40 and job.remaining == 0
+    assert eng.stats.serviced_bytes["DECODE_FETCH"] == 40
+
+
+def test_fetch_job_planes_resolved_once_at_service_time():
+    """A ladder re-assignment landing between submit and service must move
+    BOTH the lane-pool bytes and the controller kv_read charge — they can
+    never disagree on the plane count (the submit-time-sizing bug)."""
+    from repro.serving.scheduler import make_fetch_job
+
+    store = CompressedKVStore()
+    key = PageKey(0, 0, 0, "k")
+    store.put_page(key, logmag_kv_cache(PAGE_TOKENS, 64, seed=0), planes=16)
+    eng = CompressionEngineRuntime(MemCtlConfig(step_cycles=None))
+    stats = {"kv_fetch_misses": 0}
+    job = eng.submit(make_fetch_job(store, stats, key, 0))
+    store.set_planes(key, 4)  # re-ranked after submit, before service
+    eng.tick()
+    ct = store.controller.kv_page(key.astuple())
+    # lane bytes: planes/bits of the pad-free logical page, at FOUR planes
+    assert job.nbytes == max(1, round(ct.valid_logical_bytes * 4 / ct.spec.bits))
+    # the kv_read event charged the same four planes
+    _, r_phys = store.controller.stats.kind_bytes("kv_read")
+    assert r_phys == ct.fetch_bytes(4)
+    assert stats["kv_fetch_misses"] == 0
+
+
+def test_fetch_job_of_page_evicted_after_submit_counts_miss():
+    from repro.serving.scheduler import make_fetch_job
+
+    store = CompressedKVStore()
+    key = PageKey(0, 0, 0, "k")
+    store.put_page(key, logmag_kv_cache(PAGE_TOKENS, 64, seed=0))
+    eng = CompressionEngineRuntime(MemCtlConfig(step_cycles=None))
+    stats = {"kv_fetch_misses": 0}
+    eng.submit(make_fetch_job(store, stats, key, 0))
+    store.drop_sequence(0)  # gone before the engine got to it
+    eng.tick()
+    assert stats["kv_fetch_misses"] == 1
+    assert store.footprint()["misses"] == 1  # store counters agree
+    assert store.controller.stats.kind_bytes("kv_read") == (0, 0)
+
+
+def test_eviction_writeback_survives_sequence_retirement():
+    """Budget-eviction stream-outs are committed work (seq_id=None): a
+    cancel_seq for the owning sequence must NOT drop them — the drain loop
+    services them instead."""
+    probe = CompressedKVStore()
+    probe.put_page(PageKey(7, 0, 0), logmag_kv_cache(PAGE_TOKENS, 64, seed=0))
+    page_bytes = probe.footprint()["stored_bytes"]
+
+    rt = _runtime(step_cycles=1)
+    store = CompressedKVStore(max_stored_bytes=int(2.5 * page_bytes), engine=rt)
+    for p in range(3):
+        store.put_page(PageKey(7, 0, p),
+                       logmag_kv_cache(PAGE_TOKENS, 64, seed=p))
+    assert rt.queue.depth(JobClass.BACKGROUND) == 1
+    assert rt.cancel_seq(7) == 0  # retirement cannot cancel the write-back
+    assert rt.queue.depth(JobClass.BACKGROUND) == 1

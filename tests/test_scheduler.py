@@ -214,7 +214,11 @@ def test_mixed_batch_evicts_under_budget_and_reports_savings(smoke_model):
 def test_report_emits_per_1k_request_stats(smoke_model):
     model, params = smoke_model
     eng = ServingEngine(model, params, EngineConfig(max_batch=4, max_ctx=160))
-    reqs = [Request(rid=i, prompt=_prompt(20 + i, i), max_new_tokens=4)
+    # page-multiple prompts: capacity saving must be positive on full pages
+    # (ragged tails are stored exact-length and can erode the ratio — that
+    # is the honest pad-free accounting, covered by the pad-free tests)
+    reqs = [Request(rid=i, prompt=_prompt(32 + PAGE_TOKENS * i, i),
+                    max_new_tokens=4)
             for i in range(3)]
     eng.run(reqs)
     rep = eng.report()
@@ -231,8 +235,14 @@ def test_report_emits_per_1k_request_stats(smoke_model):
 def test_scheduler_rejects_oversized_and_unsupported(smoke_model):
     model, params = smoke_model
     sched = ContinuousScheduler(model, params, EngineConfig(max_ctx=64))
+    # a prompt that leaves no decode room is rejected; one that merely asks
+    # for more new tokens than fit is admitted and truncated at the window
     with pytest.raises(ValueError, match="exceeds max_ctx"):
-        sched.submit(Request(rid=0, prompt=_prompt(60), max_new_tokens=32))
+        sched.submit(Request(rid=0, prompt=_prompt(64), max_new_tokens=1))
+    # bucketed chunks are page-aligned: a ragged max_ctx would let the
+    # final bucket clamp and overwrite earlier rows — rejected up front
+    with pytest.raises(ValueError, match="multiple of PAGE_TOKENS"):
+        ContinuousScheduler(model, params, EngineConfig(max_ctx=100))
 
 
 def test_engine_config_exposes_codec_and_geometry(smoke_model):
@@ -278,3 +288,187 @@ def test_engine_run_matches_scheduler_outputs(smoke_model):
     sched.submit(r2)
     sched.run_until_drained()
     assert r1.output == r2.output
+
+
+# ---------------------------------------------------------------------------
+# Bucketed chunked-prefill admission (ISSUE 3)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_schedule_is_page_aligned_and_exact():
+    from repro.serving.scheduler import chunk_schedule, prefill_buckets
+
+    buckets = prefill_buckets(256)
+    assert buckets == [16, 32, 64, 128, 256]
+    for n in (1, 5, 16, 17, 37, 90, 200, 255):
+        chunks = chunk_schedule(n, buckets)
+        assert sum(real for _, real in chunks) == n
+        start = 0
+        for i, (bucket, real) in enumerate(chunks):
+            assert bucket in buckets
+            assert start % PAGE_TOKENS == 0  # every chunk starts page-aligned
+            if i < len(chunks) - 1:
+                assert real == bucket  # only the final chunk may be ragged
+            start += real
+
+
+def test_bucketed_prefill_bounds_compiles_on_mixed_trace(smoke_model):
+    """64 mixed-length requests compile at most log2(max_ctx) prefill
+    variants; the left-pad baseline needs strictly more on the same trace."""
+    import math
+
+    model, params = smoke_model
+    rng = np.random.default_rng(0)
+    lens = rng.integers(8, 200, 64)
+
+    def run(mode):
+        sched = ContinuousScheduler(model, params, EngineConfig(
+            max_batch=8, max_ctx=256, store_kv_compressed=False,
+            prefill_mode=mode,
+        ))
+        for i, n in enumerate(lens):
+            sched.submit(Request(rid=i, prompt=_prompt(int(n), i),
+                                 max_new_tokens=2))
+        sched.run_until_drained()
+        return sched.report()
+
+    bucketed = run("bucketed")
+    padded = run("padded")
+    assert bucketed["requests_completed"] == 64
+    assert bucketed["prefill_compiles"] <= math.log2(256)
+    assert padded["prefill_compiles"] > bucketed["prefill_compiles"]
+    # pad-free admission: bucketed prefill feeds exactly the prompt tokens
+    assert bucketed["prefill_tokens"] == int(lens.sum())
+    assert padded["prefill_tokens"] > bucketed["prefill_tokens"]
+
+
+def test_chunked_prefill_is_pad_free(smoke_model):
+    """cache["len"] holds the TRUE prompt length and every stored page
+    round-trips to the device KV — no left-pad garbage, no phantom logical
+    bytes for the ragged tail."""
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=160, store_layers=2,
+    ))
+    n = 37  # 2 full pages + a 5-token ragged tail
+    req = Request(rid=0, prompt=_prompt(n), max_new_tokens=8)
+    sched.submit(req)
+    sched.step()  # full admission (idle scheduler) + first decode token
+
+    # true length: prompt tokens + the one decoded token, never padded
+    assert int(sched._lens[0]) == n + 1
+    assert sched.report()["prefill_tokens"] == n
+    # exact-length tail page: logical accounting counts 37 tokens, not 48
+    ch = sched._cache["k"].shape[-2] * sched._cache["k"].shape[-1]
+    per_tok = 2 * ch * 2  # k+v streams, bf16
+    assert sched.store.footprint()["logical_bytes"] == 2 * n * per_tok
+    # stored pages hold the real KV (tail pad rows are repeats of the last
+    # real token, excluded from accounting and never attended)
+    k_dev, v_dev = sched._slot_kv_host(0, 0, n)
+    for li in range(2):
+        back = sched.store.get_sequence(0, li, "k", n)
+        np.testing.assert_array_equal(
+            back.view(np.uint16), k_dev[li].view(np.uint16)
+        )
+        back = sched.store.get_sequence(0, li, "v", n)
+        np.testing.assert_array_equal(
+            back.view(np.uint16), v_dev[li].view(np.uint16)
+        )
+    sched.run_until_drained()
+    assert req.done and len(req.output) == 8
+
+
+def test_chunked_admission_overlaps_decode(smoke_model):
+    """A long prompt joins chunk-by-chunk while the batch keeps decoding —
+    admission no longer stalls in-flight requests."""
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=256, store_kv_compressed=False,
+    ))
+    a = Request(rid=0, prompt=_prompt(16), max_new_tokens=24)
+    sched.submit(a)
+    for _ in range(3):
+        sched.step()
+    assert len(a.output) == 3
+
+    b = Request(rid=1, prompt=_prompt(96, 5), max_new_tokens=4)  # 2 chunks
+    sched.submit(b)
+    sched.step()  # b advances ONE chunk; a still decodes
+    slot_b = next(s for s in sched._slots if s is not None and s.req.rid == 1)
+    assert slot_b.prefilling, "long admission must spread across steps"
+    assert len(a.output) == 4, "decode must not stall during admission"
+    sched.step()  # final chunk lands; b joins decode this step
+    assert not slot_b.prefilling
+    assert len(a.output) == 5 and len(b.output) == 1
+    sched.run_until_drained()
+    assert a.done and b.done and len(b.output) == 4
+
+
+# ---------------------------------------------------------------------------
+# Serving-path correctness sweep (ISSUE 3 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_mid_flight_seed_does_not_disturb_active_streams(smoke_model):
+    """Submitting a request with rng_seed must not change the sampling
+    stream of requests already in flight (the shared-key reset bug)."""
+    from repro.serving.sampler import SamplerConfig
+
+    model, params = smoke_model
+    samp = SamplerConfig(temperature=0.8, top_k=8)
+
+    def tokens_of_a(with_seeded_b):
+        sched = ContinuousScheduler(model, params, EngineConfig(
+            max_batch=2, max_ctx=192, sampler=samp,
+            store_kv_compressed=False,
+        ))
+        a = Request(rid=0, prompt=_prompt(20), max_new_tokens=10)
+        sched.submit(a)
+        for _ in range(3):
+            sched.step()
+        if with_seeded_b:
+            sched.submit(Request(rid=1, prompt=_prompt(24, 7),
+                                 max_new_tokens=4), rng_seed=123)
+        sched.run_until_drained()
+        return list(a.output)
+
+    assert tokens_of_a(False) == tokens_of_a(True)
+
+
+def test_requests_truncated_at_context_window_say_so(smoke_model):
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=64, store_kv_compressed=False,
+    ))
+    r = Request(rid=0, prompt=_prompt(40), max_new_tokens=32)
+    done = Request(rid=1, prompt=_prompt(20, 3), max_new_tokens=4)
+    sched.submit(r)
+    sched.submit(done)
+    sched.run_until_drained()
+    assert r.done and r.truncated and len(r.output) == 64 - 40
+    assert done.done and not done.truncated and len(done.output) == 4
+    assert sched.report()["requests_truncated"] == 1
+
+
+def test_run_until_drained_services_engine_backlog(smoke_model):
+    """The drain loop must keep ticking until queued engine jobs (eviction
+    write-backs with fn=None among them) are serviced — otherwise report()
+    underquotes utilization and modeled latency."""
+    from repro.memctl import MemCtlConfig
+
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=96,
+        engine=MemCtlConfig(lanes=1, step_cycles=64),  # 2 KB per step
+    ))
+    r = Request(rid=0, prompt=_prompt(20), max_new_tokens=3)
+    sched.submit(r)
+    sched.run_until_drained()
+    assert len(sched.engine.queue) == 0 and not sched.has_work()
+
+    # raw backlog (no slots, no waiting) must still count as work
+    sched.engine.submit_eviction(("k", 0, 0), 64 * 1024)
+    assert sched.has_work()
+    sched.run_until_drained()
+    assert len(sched.engine.queue) == 0 and not sched.has_work()
+    assert sched.engine.stats.serviced_bytes["BACKGROUND"] >= 64 * 1024
