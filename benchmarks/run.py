@@ -36,6 +36,9 @@ MODULES = [
     ("engine_util", "benchmarks.engine_utilization",
      {"fast": dict(n_requests=6, rate=0.8, max_steps=150),
       "smoke": dict(n_requests=4, rate=0.8, max_steps=80)}),
+    ("serving_sharded", "benchmarks.serving_sharded",
+     {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
+      "smoke": dict(n_requests=5, rate=0.8, max_steps=100)}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]

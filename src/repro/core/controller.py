@@ -70,6 +70,11 @@ class ControllerStats:
         t = self.totals.get(kind, (0, 0, 0))
         return t[0], t[1]
 
+    def kind_count(self, kind: str) -> int:
+        """Number of logged events of one kind (per-tier charge counting —
+        the backend conformance suite checks every kv_write charged once)."""
+        return self.totals.get(kind, (0, 0, 0))[2]
+
     @property
     def logical_bytes(self) -> int:
         return sum(t[0] for t in self.totals.values())

@@ -38,8 +38,11 @@ class Job:
     fn: Optional[Callable[[], object]] = None
     #: page key / identity — dedupes pending work and supports cancellation
     key: Hashable = None
-    #: sequence id for cancel-on-retire (None = never cancelled)
-    seq_id: Optional[int] = None
+    #: cancellation scope for cancel-on-retire (None = never cancelled).
+    #: Single-tier backends use the bare request id; sharded backends use a
+    #: ``(shard, rid)`` tuple so retiring a request's work on one shard can
+    #: never cancel a same-rid job queued on another shard.
+    seq_id: Optional[Hashable] = None
     #: deferred sizing: when set, the runtime calls it ONCE — at service
     #: start, not submit time — to resolve ``nbytes``.  Decode fetches use
     #: this so a ladder re-assignment between submit and service cannot make
@@ -103,8 +106,12 @@ class PriorityJobQueue:
             return (klass, key) in self._pending_keys
         return any((k, key) in self._pending_keys for k in JobClass)
 
-    def cancel_seq(self, seq_id: int) -> int:
-        """Drop every queued job belonging to a retired sequence."""
+    def cancel_seq(self, seq_id: Hashable) -> int:
+        """Drop every queued job whose cancellation scope equals ``seq_id``.
+
+        The match is exact: a sharded backend that scopes jobs with
+        ``(shard, rid)`` tuples cancels one shard's work only — a bare-rid
+        cancel cannot reach a tuple-scoped job and vice versa."""
         dropped = 0
         for k, q in self._queues.items():
             keep = deque()
@@ -122,6 +129,14 @@ class PriorityJobQueue:
         if klass is not None:
             return len(self._queues[klass])
         return sum(len(q) for q in self._queues.values())
+
+    def remaining_bytes(self) -> int:
+        """Unserviced logical bytes across all queued jobs — the backlog the
+        lane pool still has to move.  Service-time-sized jobs (decode
+        fetches, ``size_fn`` pending) count as 0 until sized; write and
+        background traffic dominates a real backlog, so this stays a sound
+        admission-pressure signal."""
+        return sum(job.remaining for q in self._queues.values() for job in q)
 
     def mark_deferred(self) -> int:
         """A step window closed with these jobs still queued."""

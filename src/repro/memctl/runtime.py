@@ -61,10 +61,27 @@ class CompressionEngineRuntime:
     def pending(self, key, klass: JobClass | None = None) -> bool:
         return self.queue.pending(key, klass)
 
-    def cancel_seq(self, seq_id: int) -> int:
+    def cancel_seq(self, seq_id) -> int:
+        """Cancel queued jobs by cancellation scope (exact match — sharded
+        backends scope with ``(shard, rid)`` tuples, see queue.cancel_seq)."""
         n = self.queue.cancel_seq(seq_id)
         self.stats.cancelled_jobs += n
         return n
+
+    def pressure_ns(self) -> float:
+        """Modeled engine latency a newly admitted request would see right
+        now: the time the lane pool needs to drain the queued backlog
+        (``queue.remaining_bytes`` at the aggregate lane rate) plus how far
+        the service clock already runs past the current window's start.
+        Zero for an unbounded engine or an engine that keeps up — the
+        admission-backpressure signal the scheduler consults against
+        ``EngineConfig.admit_latency_ns_max``."""
+        if self.clock.unbounded:
+            return 0.0
+        drain_cycles = (self.queue.remaining_bytes()
+                        / (self.cfg.lanes * self.cfg.lane_bytes_per_cycle))
+        lag = max(0, self.clock.now - self.clock.step_start)
+        return self.clock.cycles_to_ns(lag + drain_cycles)
 
     # -------------------------------------------------------------- servicing
     def tick(self) -> dict:
@@ -144,3 +161,53 @@ class CompressionEngineRuntime:
             "silicon": self.cfg.silicon_cost(),
         })
         return r
+
+
+def aggregate_engine_reports(reports: list) -> dict:
+    """Fleet view over per-shard engine reports (ShardedBackend's report()).
+
+    Capacity-like quantities (serviced jobs/bytes, deferred work, lanes,
+    budgets, silicon area/power) SUM across shards; latency-like quantities
+    (modeled latency, lag, queue depth) take the WORST shard — a request is
+    only as fast as its slowest shard's fetches; utilization averages
+    lane-weighted.  A single report passes through unchanged upstream (the
+    caller skips aggregation for one tier), so paged numbers are untouched.
+    """
+    assert reports, "aggregate_engine_reports needs at least one report"
+    classes = reports[0]["serviced_jobs"].keys()
+    lanes = sum(r["lanes"] for r in reports)
+    budgets = [r["step_budget_bytes"] for r in reports]
+    silicon: dict = {}
+    for r in reports:
+        for k, v in r["silicon"].items():
+            silicon[k] = (silicon.get(k, 0) + v
+                          if isinstance(v, (int, float)) else v)
+    return {
+        "shards": len(reports),
+        "serviced_jobs": {c: sum(r["serviced_jobs"][c] for r in reports)
+                          for c in classes},
+        "serviced_bytes": {c: sum(r["serviced_bytes"][c] for r in reports)
+                           for c in classes},
+        "total_serviced_jobs": sum(r["total_serviced_jobs"] for r in reports),
+        "total_serviced_bytes": sum(r["total_serviced_bytes"] for r in reports),
+        "deferred_job_steps": sum(r["deferred_job_steps"] for r in reports),
+        "cancelled_jobs": sum(r["cancelled_jobs"] for r in reports),
+        "steps": max(r["steps"] for r in reports),
+        "peak_step_serviced_bytes": max(r["peak_step_serviced_bytes"]
+                                        for r in reports),
+        "queue_depth": {q: max(r["queue_depth"][q] for r in reports)
+                        for q in reports[0]["queue_depth"]},
+        "lanes": lanes,
+        "clock_ghz": reports[0]["clock_ghz"],
+        "block_bits": reports[0]["block_bits"],
+        "unbounded": all(r["unbounded"] for r in reports),
+        "step_budget_bytes": (None if any(b is None for b in budgets)
+                              else sum(budgets)),
+        "utilization": (sum(r["utilization"] * r["lanes"] for r in reports)
+                        / max(1, lanes)),
+        "elapsed_cycles": max(r["elapsed_cycles"] for r in reports),
+        "modeled_latency_ns": max(r["modeled_latency_ns"] for r in reports),
+        "lag_ns": max(r["lag_ns"] for r in reports),
+        "mean_step_lag_ns": max(r["mean_step_lag_ns"] for r in reports),
+        "silicon": silicon,
+    }

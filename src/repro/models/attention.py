@@ -378,6 +378,7 @@ def attn_apply(
     use_rope=True,
     bidirectional=False,
     window=None,
+    append_valid=None,
 ):
     """One attention sub-layer.
 
@@ -386,9 +387,17 @@ def attn_apply(
     decode/prefill-append.  The 3-tuple form is a *ring buffer* (sliding-window
     archs: S_cache == window): new tokens land at slot ``pos % S_cache`` and
     ``kv_pos`` (B, S_cache) records absolute positions (-1 = unfilled).
-    cache_len: scalar int32, valid entries already in the cache.
+    cache_len: scalar int32, valid entries already in the cache; a (B,)
+    vector selects the continuous-batching per-row append paths (dense AND
+    ring caches — each batch row appends at its own position).
     kv_input: cross-attention source (B, S_kv, d) — projects k/v from it and
     ignores the cache-append path when paired with precomputed caches.
+    append_valid: optional absolute end of REAL appended tokens for the ring
+    chunk-append path (S > 1 into a ring cache): a ragged prefill chunk
+    arrives right-padded to its bucket, and in a ring the pad rows would
+    *overwrite* older in-window entries, so the write-back keeps only
+    positions < ``append_valid`` (dense caches don't need this — pad rows
+    land past the true length and the next chunk/decode overwrites them).
     Returns (y, new_cache) — with cache=None, new_cache is the freshly
     projected (k, v) pair (post-rope), which prefill uses to build the cache.
     """
@@ -440,20 +449,65 @@ def attn_apply(
         out = merge_attention_partials(parts).astype(q.dtype)
         new_cache = (ck, cv, sk, sv)
     elif len(cache) == 3:
-        # Ring-buffer append (S == 1 decode steps only).
         ck, cv, cpos = cache
         w = ck.shape[1]
-        slot = cache_len % w
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cpos, jnp.broadcast_to(cache_len, (cpos.shape[0], 1)).astype(cpos.dtype),
-            (0, slot),
-        )
-        out = decode_attention(
-            q, ck, cv, q_pos=pos, kv_valid=cache_len + x.shape[1],
-            window=window, bidirectional=bidirectional, kv_pos=cpos,
-        )
+        if x.shape[1] > 1:
+            # Ring chunk append (bucketed prefill into a sliding-window
+            # slot; chunk size <= w, enforced by the serving bucket cap).
+            # The chunk attends over [old ring entries] ++ [the chunk
+            # itself]: ring slots the chunk is about to overwrite are still
+            # visible (at their OLD absolute kv_pos) to the chunk's early
+            # queries, and a slot's old position p and its new occupant
+            # p + w can never both pass the window mask for one query.
+            c = k.shape[1]
+            slots = (jnp.asarray(cache_len, jnp.int32) + jnp.arange(c)) % w
+            valid_end = (jnp.asarray(append_valid, jnp.int32)
+                         if append_valid is not None
+                         else jnp.asarray(cache_len + c, jnp.int32))
+            k_cat = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
+            v_cat = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
+            pos_cat = jnp.concatenate([cpos, pos.astype(cpos.dtype)], axis=1)
+            out = flash_attention(
+                q, k_cat, v_cat, hm, q_pos=pos, kv_valid=valid_end,
+                window=window, bidirectional=bidirectional, kv_pos=pos_cat,
+            )
+            # write back REAL tokens only: a right-padded ragged tail must
+            # not clobber older in-window ring entries (see docstring)
+            keep = (cache_len + jnp.arange(c)) < valid_end  # (C,)
+            new_k = jnp.where(keep[None, :, None, None],
+                              k.astype(ck.dtype), ck[:, slots])
+            new_v = jnp.where(keep[None, :, None, None],
+                              v.astype(cv.dtype), cv[:, slots])
+            new_p = jnp.where(keep[None, :], pos.astype(cpos.dtype),
+                              cpos[:, slots])
+            ck = ck.at[:, slots].set(new_k)
+            cv = cv.at[:, slots].set(new_v)
+            cpos = cpos.at[:, slots].set(new_p)
+        elif getattr(cache_len, "ndim", 0) == 1:
+            # Continuous batching on a ring cache: per-row lengths (B,) —
+            # each row appends at its own slot ``len % w``; same dummy-row
+            # contract as the dense per-slot path below (garbage lands at
+            # the row's own next position and is overwritten by its next
+            # chunk/decode, masked for every real query meanwhile).
+            rows = jnp.arange(ck.shape[0])
+            slot = cache_len % w
+            ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+            cpos = cpos.at[rows, slot].set(cache_len.astype(cpos.dtype))
+        else:
+            # Ring-buffer append (S == 1 decode steps, aligned batch).
+            slot = cache_len % w
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cpos, jnp.broadcast_to(cache_len, (cpos.shape[0], 1)).astype(cpos.dtype),
+                (0, slot),
+            )
+        if x.shape[1] == 1:
+            out = decode_attention(
+                q, ck, cv, q_pos=pos, kv_valid=cache_len + 1,
+                window=window, bidirectional=bidirectional, kv_pos=cpos,
+            )
         new_cache = (ck, cv, cpos)
     elif getattr(cache_len, "ndim", 0) == 1:
         # Continuous batching: per-sequence cache lengths (B,).  Each batch

@@ -36,8 +36,10 @@ class Model:
     init_cache: Callable[..., Any]
     #: (params, tokens (1, C), cache, slot, start, last_idx) ->
     #: (logits, cache) — bucketed chunked prefill into one serving slot's
-    #: rows (dense-cache families only; None elsewhere).  The continuous
-    #: scheduler compiles one variant per power-of-two bucket size C.
+    #: rows (dense-cache families only; None elsewhere).  Works on dense
+    #: AND sliding-window ring caches (the serving RingBackend caps C at
+    #: the window).  The continuous scheduler compiles one variant per
+    #: power-of-two bucket size C.
     prefill_chunk: Callable[..., tuple] | None = None
 
 

@@ -82,10 +82,12 @@ def head_weight(params):
 # ---------------------------------------------------------------------------
 
 
-def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache):
+def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache,
+               append_valid=None):
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     attn_out, new_kv = attn_apply(
-        lp["attn"], h, cfg, pos=pos, cache=cache_kv, cache_len=cache_len
+        lp["attn"], h, cfg, pos=pos, cache=cache_kv, cache_len=cache_len,
+        append_valid=append_valid,
     )
     x = x + attn_out
     h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
@@ -102,11 +104,17 @@ def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache):
 
 def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
     """x: (B, S, d). cache: {'k','v'} stacked (L, B, Smax, Hkv, hd) + 'len'
-    [+ 'pos' (L, B, Smax) for sliding-window ring caches].
+    [+ 'pos' (L, B, Smax) for sliding-window ring caches; + 'valid' (scalar,
+    not per-layer) = absolute end of real appended tokens for a ring chunk
+    append — see ``attn_apply(append_valid=...)``].
 
     Returns (x_final, new_cache_stack_or_None, aux_sum).
     """
     remat = cfg.remat if remat is None else remat
+    append_valid = None
+    if cache is not None and "valid" in cache:
+        append_valid = cache["valid"]
+        cache = {k: v for k, v in cache.items() if k != "valid"}
     cache_len = cache["len"] if cache is not None else jnp.int32(0)
     ring = cache is not None and "pos" in cache
     staged = cache is not None and "sk" in cache
@@ -119,7 +127,9 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
         else:
             lp = xs
             kv = None
-        x, new_kv, aux = _layer_seq(lp, x, cfg, pos, kv, cache_len, want_cache or cache is not None)
+        x, new_kv, aux = _layer_seq(lp, x, cfg, pos, kv, cache_len,
+                                    want_cache or cache is not None,
+                                    append_valid=append_valid)
         ys = new_kv if (want_cache or cache is not None) else None
         return (x, aux_acc + aux), ys
 
@@ -257,27 +267,40 @@ def lm_prefill_chunk(params, cfg, tokens, cache, slot, start, last_idx):
     the chunk attends to the slot's rows [0, start) (flash prefill-append
     path in models/attention), so interleaving chunks with batched decode
     steps of *other* slots is safe.
+
+    Ring caches (sliding-window archs: ``cache`` carries 'pos') take the
+    ring chunk-append path instead: the chunk's tokens land at slots
+    ``pos % window`` of the slot's ring, the chunk attends over the old
+    ring entries plus itself under the window mask, and only REAL tokens
+    are written back (``cache['valid']`` = start + last_idx + 1), so a
+    ragged tail's pad can never clobber older in-window entries.  The
+    serving scheduler caps bucket sizes at the window for this path.
     """
+    ring = "pos" in cache
     ksl = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
     vsl = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
     x = embed_apply(params["embed"], tokens)
     c = x.shape[1]
     start = jnp.asarray(start, jnp.int32)
     pos = start + jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (1, c))
-    x, new_kv, _ = run_stack(
-        params, cfg, x, pos,
-        cache={"k": ksl, "v": vsl, "len": start}, remat=False,
-    )
+    sub = {"k": ksl, "v": vsl, "len": start}
+    if ring:
+        sub["pos"] = jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1, axis=1)
+        sub["valid"] = start + jnp.asarray(last_idx, jnp.int32) + 1
+    x, new_kv, _ = run_stack(params, cfg, x, pos, cache=sub, remat=False)
     x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     x_last = rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x_last, head_weight(params))[:, 0]
-    k_new = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], new_kv["k"], slot, axis=1
-    )
-    v_new = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], new_kv["v"], slot, axis=1
-    )
-    return logits.astype(jnp.float32), {**cache, "k": k_new, "v": v_new}
+    out = {
+        **cache,
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], new_kv["k"], slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], new_kv["v"], slot, axis=1),
+    }
+    if ring:
+        out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], new_kv["pos"], slot, axis=1
+        )
+    return logits.astype(jnp.float32), out
 
 
 def lm_decode(params, cfg, token, cache):
@@ -285,7 +308,8 @@ def lm_decode(params, cfg, token, cache):
 
     ``cache["len"]`` may be a scalar (aligned batch) or a (B,) vector of
     per-sequence lengths (continuous batching — each slot decodes at its own
-    position against its own valid prefix).
+    position against its own valid prefix; dense and ring caches both take
+    per-row append paths in models/attention).
 
     Returns (logits (B, Vpad), new cache).
     """

@@ -37,6 +37,20 @@ def dp_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def abstract_mesh(sizes, names):
+    """Device-free mesh for planning/routing decisions (jax-version
+    compatible): >=0.5 takes (sizes, names); 0.4.x takes one
+    ((name, size), ...) shape tuple.  The serving ShardedBackend uses this
+    to consult :func:`cache_pspecs` for KV-head vs sequence routing without
+    touching device state."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def axes_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

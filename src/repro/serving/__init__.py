@@ -1,9 +1,17 @@
-"""Serving stack: compressed paged KV store, sampler, continuous-batching
-scheduler with compressed-KV eviction, all scheduled against the
-finite-throughput memctl (de)compression engine (the paper's inference
-deployment)."""
+"""Serving stack: continuous-batching scheduler over pluggable KV memory
+tiers (paged / sharded / ring backends behind the KVBackend protocol), all
+scheduled against the finite-throughput memctl (de)compression engine (the
+paper's inference deployment)."""
 
 from repro.memctl import MemCtlConfig  # noqa: F401  (engine geometry knob)
+from repro.serving.backends import (  # noqa: F401
+    BACKENDS,
+    KVBackend,
+    PagedBackend,
+    RingBackend,
+    ShardedBackend,
+    make_backend,
+)
 from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
 from repro.serving.kv_cache import CompressedKVStore, PageEvictedError  # noqa: F401
 from repro.serving.sampler import SamplerConfig, sample  # noqa: F401

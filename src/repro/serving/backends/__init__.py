@@ -1,0 +1,33 @@
+"""Pluggable memory-tier backends behind one serving API (ISSUE 4).
+
+``EngineConfig.backend`` selects the policy; :func:`make_backend` is the
+only constructor the scheduler uses.  See :mod:`.base` for the protocol.
+"""
+
+from repro.serving.backends.base import KVBackend, MemTier, SlotState  # noqa: F401
+from repro.serving.backends.paged import PagedBackend
+from repro.serving.backends.ring import RingBackend
+from repro.serving.backends.sharded import ShardedBackend
+
+BACKENDS = {
+    PagedBackend.name: PagedBackend,
+    ShardedBackend.name: ShardedBackend,
+    RingBackend.name: RingBackend,
+}
+
+__all__ = [
+    "BACKENDS", "KVBackend", "MemTier", "PagedBackend", "RingBackend",
+    "ShardedBackend", "SlotState", "make_backend",
+]
+
+
+def make_backend(model, cfg, controller=None, stats=None) -> KVBackend:
+    """Build the memory-tier backend ``cfg.backend`` names."""
+    try:
+        cls = BACKENDS[cfg.backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown KV backend {cfg.backend!r}; available: "
+            f"{sorted(BACKENDS)}"
+        ) from None
+    return cls(model, cfg, controller=controller, stats=stats)

@@ -1,0 +1,577 @@
+"""``KVBackend``: the protocol between the continuous-batching scheduler
+and the memory tier (ISSUE 4 tentpole).
+
+The scheduler used to reach directly into ONE ``CompressedKVStore`` and one
+dense device cache dict — page writes, decode-fetch planning, eviction
+re-activation, ladder-plane assignment, retirement cleanup and savings
+reporting were all inline scheduler code, which hard-wired a single-device
+single-tier deployment.  ``KVBackend`` extracts that whole surface behind a
+protocol so the backing tier is a *policy*:
+
+* ``PagedBackend``  — today's single-device compressed paged tier
+  (bit-exact with the pre-refactor scheduler).
+* ``ShardedBackend`` — per-shard slot map + compressed tier + memctl lane
+  budget; pages are routed by KV-head ownership (or block-cyclic over the
+  sequence axis) using the ``runtime/sharding`` mesh rules.
+* ``RingBackend``   — per-slot sliding-window ring caches (Mixtral-family
+  configs), with pages retired as they slide out of the window.
+
+Protocol surface (what the scheduler calls — everything else is private):
+
+========================  ===================================================
+``ensure_cache()``        build/return the device decode cache (opaque to
+                          the scheduler beyond passing it to jitted fns)
+``cache`` (property)      get/set the device cache between jitted calls
+``sync_lens(lens)``       publish the per-slot true lengths to the cache
+``adopt_prefill(...)``    legacy padded admission: copy a 1-seq prefill
+                          cache into a slot's rows
+``max_prefill_bucket()``  largest chunk the backend's cache layout accepts
+``bind_slot/retire``      slot lifecycle (retire cancels queued engine jobs
+                          — shard-scoped — and drops the request's pages)
+``on_prefill_progress``   store newly completed prompt KV (pages + ragged
+                          exact-length tail), assign ladder planes when done
+``on_decode_token``       store a filled decode page, re-rank the ladder,
+                          queue this step's decode-critical fetches
+``tick/backlog``          service each tier's engine window / queued work
+``admit_pressure_ns()``   engine-limited latency signal for admission
+                          backpressure
+``note_peaks/report``     footprint peaks + aggregated savings/engine stats
+========================  ===================================================
+
+A backend owns one or more :class:`MemTier` (controller + compressed store
++ finite-throughput engine); all byte accounting flows through tiers, never
+through the scheduler.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import default_codec
+from repro.core.compressed_store import StoreConfig
+from repro.core.controller import MemoryController
+from repro.core.quantization import (
+    assign_page_precision,
+    page_minmax,
+    quest_scores,
+)
+from repro.memctl import CompressionEngineRuntime, Job, JobClass
+from repro.memctl.runtime import aggregate_engine_reports
+from repro.serving.kv_cache import (
+    PAGE_TOKENS,
+    CompressedKVStore,
+    PageEvictedError,
+    PageKey,
+    iter_page_chunks,
+)
+
+#: stat keys the backend mutates on the (shared) scheduler stats dict
+BACKEND_STATS = (
+    "kv_fetch_misses", "kv_fetch_deferrals", "kv_reactivations",
+    "engine_jobs_cancelled", "kv_peak_stored_bytes", "kv_peak_logical_bytes",
+)
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Backend-side per-slot bookkeeping (the scheduler no longer tracks
+    any memory state)."""
+
+    rid: int
+    #: device tokens [0, stored_tokens) have been submitted to the store
+    #: (exact-length tail pages included); fetch accounting and
+    #: re-activation range over exactly these pages
+    stored_tokens: int = 0
+    #: ladder plane count per page index (consulted by queued write jobs at
+    #: service time, so evicted pages keep their precision)
+    page_planes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: first page not yet fully slid out of the attention window (ring
+    #: tiers; always 0 for full-attention backends)
+    live_from_page: int = 0
+
+
+class MemTier:
+    """One shard's memory stack: MemoryController + CompressedKVStore +
+    finite-throughput CompressionEngineRuntime, wired exactly the way the
+    pre-refactor scheduler wired its single tier (codec resolution
+    included), so a one-tier backend is bit-exact with it."""
+
+    def __init__(self, cfg, controller: MemoryController | None = None,
+                 max_stored_bytes: int | None = None, index: int = 0):
+        self.index = index
+        codec = cfg.codec or default_codec()
+        store_cfg = StoreConfig(codec=codec)
+        # accounting-only by default: one event per resident page per decode
+        # step would grow without bound on long runs; pass a controller with
+        # retain_events=True to capture a replayable DRAM trace
+        if controller is None:
+            controller = MemoryController(store_cfg, retain_events=False)
+        elif cfg.codec is None:
+            # no explicit codec: follow the caller's controller so the pages
+            # it compresses match the store config and modeled lane silicon
+            codec = controller.config.codec
+            store_cfg = controller.config
+        else:
+            # explicit codec wins end to end — a passed controller must not
+            # silently compress with a different codec than the one the
+            # report's store/silicon numbers are quoted for
+            controller.config = store_cfg
+        mc = cfg.engine
+        if mc.engine is None:  # lane silicon follows the serving codec
+            # Table IV only characterises lz4/zstd lanes; any other
+            # registered codec falls back to the cheaper lz4 silicon
+            mc = dataclasses.replace(
+                mc, engine=codec if codec in ("lz4", "zstd") else "lz4"
+            )
+        self.engine = CompressionEngineRuntime(mc)
+        controller.attach_engine_clock(self.engine.clock)
+        self.controller = controller
+        self.store = CompressedKVStore(
+            config=store_cfg, max_stored_bytes=max_stored_bytes,
+            controller=controller, engine=self.engine,
+        )
+
+
+def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
+                   key: PageKey, seq_key) -> Job:
+    """Decode-critical fetch with SERVICE-TIME sizing.
+
+    The plane count is resolved exactly once — by ``size_fn`` when the
+    engine starts servicing the job — and the completion ``fn`` charges the
+    controller's kv_read at that same resolved count, so the lane-pool
+    bytes and the accounting can never disagree across a ladder
+    re-assignment (or an eviction) that lands between submit and service.
+    """
+    plan: dict = {}
+
+    def size() -> int:
+        if not store.contains(key):
+            store.note_miss()  # keep the store's counters honest too
+            return 0  # evicted since submit; fn counts the scheduler miss
+        nbytes, keep = store.fetch_plan(key)
+        plan["keep"] = keep
+        return nbytes
+
+    def fn() -> None:
+        if "keep" not in plan:
+            stats["kv_fetch_misses"] += 1
+            return
+        try:
+            store.account_fetch(key, keep_planes=plan["keep"])
+        except PageEvictedError:
+            stats["kv_fetch_misses"] += 1
+
+    return Job(JobClass.DECODE_FETCH, 0, fn=fn, key=key.astuple(),
+               seq_id=seq_key, size_fn=size)
+
+
+class KVBackend(abc.ABC):
+    """Base implementation of the protocol: single-tier, full-attention,
+    paged.  Subclasses override the routing/layout hooks (``_page_targets``,
+    ``_device_rows``, ``_build_tiers``, ``check_model`` ...), never the
+    scheduler-facing surface."""
+
+    name = "?"
+
+    def __init__(self, model, cfg, controller: MemoryController | None = None,
+                 stats: Dict[str, float] | None = None):
+        self.model = model
+        self.mcfg = model.cfg
+        self.cfg = cfg
+        self.check_model(model.cfg, cfg)
+        self.stats = stats if stats is not None else {}
+        for key in BACKEND_STATS:
+            self.stats.setdefault(key, 0)
+        self.tiers: List[MemTier] = self._build_tiers(controller)
+        self._cache = None
+        self._slots: Dict[int, SlotState] = {}
+
+    # ------------------------------------------------------------ validation
+    @classmethod
+    def check_model(cls, mcfg, cfg) -> None:
+        """Raise when this backend cannot serve the model/config."""
+        if mcfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"continuous batching supports dense-cache families, got "
+                f"{mcfg.family!r} (use family-specific engines for "
+                f"ssm/hybrid/encdec)"
+            )
+        if 0 < mcfg.attn_window < cfg.max_ctx:
+            raise NotImplementedError(
+                "sliding-window ring caches need backend='ring'"
+            )
+        if mcfg.decode_staging > 0:
+            raise NotImplementedError(
+                "decode staging rings conflict with per-slot lengths"
+            )
+
+    # ----------------------------------------------------------------- tiers
+    def _build_tiers(self, controller) -> List[MemTier]:
+        return [MemTier(self.cfg, controller, self.cfg.max_stored_bytes)]
+
+    def _seq_key(self, tier: MemTier, rid: int):
+        """Cancellation scope for jobs of request ``rid`` on ``tier``
+        (sharded backends scope per shard — see memctl.queue.cancel_seq)."""
+        return rid
+
+    def _page_targets(self, key: PageKey) -> List[Tuple[MemTier, Optional[slice]]]:
+        """Which tiers own (a channel slice of) this page: [(tier, cols)].
+        ``cols=None`` means the full page."""
+        return [(self.tiers[0], None)]
+
+    # ---------------------------------------------------------- device cache
+    @property
+    def cache(self):
+        """The device decode cache — opaque to the scheduler (passed whole
+        into the jitted prefill/decode functions and assigned back)."""
+        return self._cache
+
+    @cache.setter
+    def cache(self, value):
+        self._cache = value
+
+    def ensure_cache(self):
+        if self._cache is None:
+            self._cache = self._build_cache()
+        return self._cache
+
+    def _build_cache(self):
+        cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
+        assert "k" in cache and "v" in cache and "sk" not in cache and "pos" not in cache
+        cache["len"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
+        return cache
+
+    def sync_lens(self, lens) -> None:
+        self._cache["len"] = jnp.asarray(lens)
+
+    def adopt_prefill(self, slot_id: int, pcache, s: int) -> None:
+        """Legacy padded admission: copy a single-sequence prefill cache
+        into this slot's rows [0, s)."""
+        cache = self.ensure_cache()
+        cache["k"] = cache["k"].at[:, slot_id, :s].set(pcache["k"][:, 0])
+        cache["v"] = cache["v"].at[:, slot_id, :s].set(pcache["v"][:, 0])
+
+    def max_prefill_bucket(self) -> int:
+        """Largest prefill chunk the cache layout accepts (ring caches cap
+        at the window so a chunk's slots never collide)."""
+        return self.cfg.max_ctx
+
+    def _device_rows(self, t0: int, t1: int):
+        """Cache sequence-axis index holding absolute tokens [t0, t1)."""
+        return slice(t0, t1)
+
+    def stored_layers(self) -> int:
+        n_layers = self.mcfg.n_layers
+        cap = self.cfg.store_layers
+        return n_layers if cap is None else min(cap, n_layers)
+
+    def slot_kv_host(self, slot_id: int, t0: int, t1: int):
+        """Device->host copy of this slot's KV rows [t0, t1) for the stored
+        layers, flattened to (L_stored, tokens, channels) bf16."""
+        import ml_dtypes
+
+        ls = self.stored_layers()
+        rows = self._device_rows(t0, t1)
+        k = np.asarray(self._cache["k"][:ls, slot_id, rows], np.float32)
+        v = np.asarray(self._cache["v"][:ls, slot_id, rows], np.float32)
+        t = t1 - t0
+        return (k.reshape(ls, t, -1).astype(ml_dtypes.bfloat16),
+                v.reshape(ls, t, -1).astype(ml_dtypes.bfloat16))
+
+    # --------------------------------------------------------- slot lifecycle
+    def bind_slot(self, slot_id: int, rid: int) -> None:
+        self._slots[slot_id] = SlotState(rid=rid)
+
+    def retire(self, slot_id: int, rid: int) -> int:
+        """Cancel the request's queued engine jobs (shard-scoped — a cancel
+        on one tier can never reach a same-rid job on another) and drop its
+        pages.  Eviction write-backs carry ``seq_id=None`` and survive: the
+        stream-out is committed work the drain loop services.  Returns the
+        number of cancelled jobs (also accumulated on the stats dict)."""
+        cancelled = 0
+        for tier in self.tiers:
+            cancelled += tier.engine.cancel_seq(self._seq_key(tier, rid))
+            tier.store.drop_sequence(rid)
+        self.stats["engine_jobs_cancelled"] += cancelled
+        self._slots.pop(slot_id, None)
+        return cancelled
+
+    # ---------------------------------------------------------- page traffic
+    def on_prefill_progress(self, slot_id: int, end: int, final: bool) -> None:
+        """Prompt KV for tokens [0, end) is now on device: stream the newly
+        completed pages to the tier (full pages as chunks land; on the
+        final call also the ragged tail as an exact-length page), then
+        assign ladder planes once the prompt is complete."""
+        if not self.cfg.store_kv_compressed:
+            return
+        st = self._slots[slot_id]
+        self._expire_dead_pages(st, end)
+        lo = max(st.stored_tokens, self._first_storable_token(end))
+        if lo > st.stored_tokens:
+            # a ring skipped a dead prompt prefix entirely: those pages were
+            # never stored, so fetch accounting must not range over them
+            st.live_from_page = max(st.live_from_page, lo // PAGE_TOKENS)
+        hi = end if final else (end // PAGE_TOKENS) * PAGE_TOKENS
+        if hi > lo:
+            self._write_span(slot_id, lo, hi)
+        if hi > st.stored_tokens:
+            st.stored_tokens = hi
+        if final:
+            self._assign_ladder_planes(slot_id, end)
+
+    def on_decode_token(self, slot_id: int, ln: int) -> None:
+        """One decode token landed at position ln-1: store the page if it
+        just filled (and re-rank the ladder), then queue this step's
+        decode-critical fetch traffic for the slot."""
+        if not self.cfg.store_kv_compressed:
+            return
+        st = self._slots[slot_id]
+        self._expire_dead_pages(st, ln)
+        if ln % PAGE_TOKENS == 0:  # a decode page just filled
+            self._write_span(slot_id, ln - PAGE_TOKENS, ln)
+            st.stored_tokens = ln
+            self._assign_ladder_planes(slot_id, ln)
+        self._account_step_fetch(slot_id, ln)
+
+    def _first_storable_token(self, end: int) -> int:
+        """First token whose page may still be written (ring backends skip
+        pages already outside the window; full attention stores from 0)."""
+        return 0
+
+    def _expire_dead_pages(self, st: SlotState, ln: int) -> None:
+        """Drop pages that can never be read again (ring only; no-op
+        here)."""
+
+    def _can_reactivate(self, st: SlotState, page_idx: int, ln: int) -> bool:
+        """Whether the device working set still holds every row of this
+        page (ring backends lose rows as the window slides)."""
+        return True
+
+    def _live_page_range(self, st: SlotState) -> Tuple[int, int]:
+        """[first, last) stored page indices fetch accounting ranges over;
+        derived from the stored-tokens watermark so a decode-growing tail
+        page that was never stored is not phantom-fetched."""
+        return st.live_from_page, -(-st.stored_tokens // PAGE_TOKENS)
+
+    def _write_span(self, slot_id: int, t0: int, t1: int) -> None:
+        """Page-split device KV rows [t0, t1) (t0 page-aligned; a ragged t1
+        becomes an exact-length tail page) and queue one write job per page
+        per stream per stored layer on the owning tier(s)."""
+        st = self._slots[slot_id]
+        k_np, v_np = self.slot_kv_host(slot_id, t0, t1)
+        first_page = t0 // PAGE_TOKENS
+        for li in range(k_np.shape[0]):
+            for stream, kv in (("k", k_np[li]), ("v", v_np[li])):
+                for p, chunk, valid in iter_page_chunks(kv, first_page):
+                    self._submit_page_write(
+                        slot_id, PageKey(st.rid, li, p, stream), chunk, valid
+                    )
+
+    def _submit_page_write(self, slot_id: int, key: PageKey,
+                           chunk: np.ndarray, valid: int) -> None:
+        """Queue one page's compress-and-store on the owning tier(s).  The
+        chunk is captured at submit time (the token range is append-only, so
+        it cannot change); the store put — and its charged kv_write —
+        happens when the engine services the job, at the ladder planes
+        assigned by then.  ``valid`` < PAGE_TOKENS marks an exact-length
+        tail page; the job is sized by its pad-free bytes."""
+        st = self._slots[slot_id]
+        for tier, cols in self._page_targets(key):
+            part = chunk if cols is None else chunk[:, cols]
+
+            def fn(store=tier.store, key=key, part=part, st=st, valid=valid):
+                store.put_page(key, part,
+                               planes=st.page_planes.get(key.page_idx),
+                               valid_tokens=valid)
+
+            tier.engine.submit(Job(JobClass.KV_WRITE, part[:valid].nbytes,
+                                   fn=fn, key=key.astuple(),
+                                   seq_id=self._seq_key(tier, st.rid)))
+
+    def _account_step_fetch(self, slot_id: int, ln: int) -> None:
+        """Queue this decode step's KV traffic for one slot as
+        decode-critical fetch jobs: every stored-resident page at its ladder
+        planes, sized at SERVICE time (see :func:`make_fetch_job`).  Evicted
+        pages queue a background re-activation instead (a re-compress write,
+        charged once when the engine services it — possibly steps later
+        under load); pages whose write or re-activation is still queued are
+        skipped, since their ground truth is still the device working set
+        and no compressed-tier copy exists to fetch."""
+        st = self._slots[slot_id]
+        rid = st.rid
+        p0, n_pages = self._live_page_range(st)
+        for li in range(self.stored_layers()):
+            for stream in ("k", "v"):
+                for p in range(p0, n_pages):
+                    key = PageKey(rid, li, p, stream)
+                    kt = key.astuple()
+                    reactivate = []
+                    for tier, cols in self._page_targets(key):
+                        if tier.store.contains(key):
+                            tier.engine.submit(make_fetch_job(
+                                tier.store, self.stats, key,
+                                self._seq_key(tier, rid),
+                            ))
+                        elif (tier.engine.pending(kt, JobClass.KV_WRITE)
+                              or tier.engine.pending(kt, JobClass.BACKGROUND)):
+                            # write or re-activation already queued — only
+                            # those classes restore the page; a stale queued
+                            # fetch must not suppress the re-activation
+                            self.stats["kv_fetch_deferrals"] += 1
+                        elif self._can_reactivate(st, p, ln):
+                            reactivate.append((tier, cols))
+                        else:
+                            # ring: the window slid over part of the page's
+                            # device rows — nothing left to re-compress, and
+                            # the page dies shortly anyway
+                            self.stats["kv_fetch_misses"] += 1
+                    if reactivate:
+                        self._reactivate(slot_id, key, reactivate)
+
+    def _reactivate(self, slot_id: int, key: PageKey, targets) -> None:
+        """An evicted page is needed again: queue a background re-compress
+        from the device working set, keeping the plane count the ladder last
+        assigned.  The page data is captured at submit time (append-only
+        token range) and the kv_write is charged exactly once per tier, when
+        the engine services the job.  A ragged stored tail re-activates at
+        its exact valid length."""
+        st = self._slots[slot_id]
+        t0 = key.page_idx * PAGE_TOKENS
+        valid = min(PAGE_TOKENS, st.stored_tokens - t0)
+        k_np, v_np = self.slot_kv_host(slot_id, t0, t0 + valid)
+        kv = k_np[key.layer] if key.stream == "k" else v_np[key.layer]
+        _, page, valid = next(iter_page_chunks(kv))
+        for tier, cols in targets:
+            part = page if cols is None else page[:, cols]
+
+            def fn(store=tier.store, key=key, part=part, valid=valid, st=st):
+                store.put_page(key, part,
+                               planes=st.page_planes.get(key.page_idx),
+                               valid_tokens=valid)
+                self.stats["kv_reactivations"] += 1
+
+            tier.engine.submit(Job(JobClass.BACKGROUND, part[:valid].nbytes,
+                                   fn=fn, key=key.astuple(),
+                                   seq_id=self._seq_key(tier, st.rid)))
+
+    def _assign_ladder_planes(self, slot_id: int, ln: int) -> None:
+        """Re-rank this slot's live full pages against the newest query
+        proxy and record the ladder's plane count on every stored page (all
+        layers share the last layer's ranking, as the seed engine did).  A
+        ragged stored tail page keeps full precision until it fills."""
+        ladder = self.cfg.ladder
+        if ladder is None:
+            return
+        st = self._slots[slot_id]
+        n_pages = ln // PAGE_TOKENS
+        p0 = st.live_from_page
+        if n_pages <= p0:
+            return
+        k_last = self._cache["k"][-1, slot_id,
+                                  self._device_rows(p0 * PAGE_TOKENS,
+                                                    n_pages * PAGE_TOKENS)]
+        kmin, kmax = page_minmax(k_last, PAGE_TOKENS)
+        q_proxy = self._cache["k"][-1, slot_id,
+                                   self._device_rows(ln - 1, ln)][0]
+        planes = assign_page_precision(quest_scores(q_proxy, kmin, kmax), ladder)
+        mean_planes = np.asarray(jnp.mean(planes.astype(jnp.float32), axis=1))
+        spec_bits = self.tiers[0].store.spec.bits
+        for i, p in enumerate(range(p0, n_pages)):
+            keep = int(round(float(mean_planes[i])))
+            keep = max(1, min(spec_bits, keep))
+            st.page_planes[p] = keep
+            for li in range(self.stored_layers()):
+                for stream in ("k", "v"):
+                    key = PageKey(st.rid, li, p, stream)
+                    for tier, _cols in self._page_targets(key):
+                        tier.store.set_planes(key, keep)
+
+    # ---------------------------------------------------------------- engine
+    def tick(self) -> None:
+        for tier in self.tiers:
+            tier.engine.tick()
+
+    def backlog(self) -> int:
+        """Queued engine jobs across all tiers (eviction write-backs,
+        deferred writes) — the drain loop services these before report()."""
+        return sum(len(tier.engine.queue) for tier in self.tiers)
+
+    def admit_pressure_ns(self) -> float:
+        """Worst tier's engine-limited latency right now — the admission
+        backpressure signal (`EngineConfig.admit_latency_ns_max`)."""
+        return max(tier.engine.pressure_ns() for tier in self.tiers)
+
+    # ------------------------------------------------------------- reporting
+    def note_peaks(self) -> None:
+        stored = logical = 0
+        for tier in self.tiers:
+            fp = tier.store.footprint()
+            stored += fp["stored_bytes"]
+            logical += fp["logical_bytes"]
+        self.stats["kv_peak_stored_bytes"] = max(
+            self.stats["kv_peak_stored_bytes"], stored
+        )
+        self.stats["kv_peak_logical_bytes"] = max(
+            self.stats["kv_peak_logical_bytes"], logical
+        )
+
+    def report(self) -> dict:
+        """Memory-tier half of the scheduler's report: pad-free logical vs
+        stored/fetched bytes (capacity + bandwidth savings), eviction
+        counters, and the engine-limited numbers — aggregated across tiers
+        (a single tier passes its engine report through unchanged)."""
+        s: dict = {}
+        w_log = w_phys = r_log = r_phys = 0
+        evictions = evicted_bytes = resident = 0
+        for tier in self.tiers:
+            wl, wp = tier.controller.stats.kind_bytes("kv_write")
+            rl, rp = tier.controller.stats.kind_bytes("kv_read")
+            w_log += wl
+            w_phys += wp
+            r_log += rl
+            r_phys += rp
+            fp = tier.store.footprint()
+            evictions += fp["evictions"]
+            evicted_bytes += fp["evicted_bytes"]
+            resident += fp["stored_bytes"]
+        s["kv_logical_bytes"] = w_log
+        s["kv_stored_bytes"] = w_phys
+        s["kv_fetch_logical"] = r_log
+        s["kv_fetch_physical"] = r_phys
+        if w_log:
+            s["kv_capacity_saving"] = 1 - w_phys / w_log
+        if r_log:
+            s["kv_bandwidth_saving"] = 1 - r_phys / r_log
+        s["kv_evictions"] = evictions
+        s["kv_evicted_bytes"] = evicted_bytes
+        s["kv_resident_stored_bytes"] = resident
+        # engine-limited numbers: what the modeled silicon actually sustained
+        reports = [tier.engine.report() for tier in self.tiers]
+        er = reports[0] if len(reports) == 1 else aggregate_engine_reports(reports)
+        s["engine"] = er
+        s["engine_utilization"] = er["utilization"]
+        s["engine_modeled_latency_ns"] = er["modeled_latency_ns"]
+        s["engine_deferred_jobs"] = er["deferred_job_steps"]
+        s["engine_queue_depth_p99"] = er["queue_depth"]["p99"]
+        s["admit_pressure_ns"] = self.admit_pressure_ns()
+        return s
+
+    # ------------------------------------------------- single-tier compat
+    @property
+    def store(self) -> CompressedKVStore:
+        """Tier-0 store (compat; sharded deployments have one per shard)."""
+        return self.tiers[0].store
+
+    @property
+    def controller(self) -> MemoryController:
+        return self.tiers[0].controller
+
+    @property
+    def engine(self) -> CompressionEngineRuntime:
+        return self.tiers[0].engine

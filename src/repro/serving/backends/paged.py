@@ -1,0 +1,16 @@
+"""Single-device compressed paged tier — the pre-refactor scheduler's
+memory path, verbatim, behind the :class:`~repro.serving.backends.base
+.KVBackend` protocol (the conformance suite pins it bit-exact)."""
+
+from __future__ import annotations
+
+from repro.serving.backends.base import KVBackend
+
+
+class PagedBackend(KVBackend):
+    """One :class:`MemTier` (controller + compressed store + lane engine),
+    one dense device cache, full-attention page layout.  Every default in
+    the base class IS this backend; the class exists so ``backend='paged'``
+    names a concrete policy and new tiers subclass a stable anchor."""
+
+    name = "paged"

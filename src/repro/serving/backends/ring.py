@@ -1,0 +1,124 @@
+"""Per-slot sliding-window ring tier: Mixtral-family configs join
+continuous batching.
+
+The device cache is the model's native ring buffer — sequence axis =
+``attn_window``, plus a ``pos`` plane of absolute positions — made per-slot
+addressable by the new per-row ring branches in ``models/attention``
+(vector ``cache['len']`` decode append, masked chunk append for bucketed
+prefill).  The compressed tier follows the window:
+
+* only pages FULLY inside the window are ever stored (a prompt longer than
+  the window skips its dead prefix — those device rows are already
+  overwritten and masked);
+* a stored page whose last token slides out of the window is *retired*
+  (``store.drop_page`` — dead, not cold: no eviction counters, no bus
+  bytes), so capacity tracks the O(window) live set, not the O(context)
+  history;
+* a page partially outside the window keeps being charged at full cost
+  until it dies (the honest analogue of pad-free accounting: the fetch
+  really moves those bytes even though the mask discards some rows), but
+  it can no longer be RE-ACTIVATED after an eviction — some of its device
+  rows are gone — so an evicted boundary page counts as a fetch miss
+  instead of re-compressing garbage.
+
+Prefill chunks are capped at the window (``max_prefill_bucket``) so a
+chunk's ring slots never collide; the legacy padded admission path is
+rejected (a left-padded full-length prefill cache cannot be copied into a
+window-sized ring row-for-row).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.backends.base import KVBackend, SlotState
+from repro.serving.kv_cache import PAGE_TOKENS, PageKey
+
+
+class RingBackend(KVBackend):
+    name = "ring"
+
+    # ------------------------------------------------------------ validation
+    @classmethod
+    def check_model(cls, mcfg, cfg) -> None:
+        if mcfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"continuous batching supports dense-cache families, got "
+                f"{mcfg.family!r}"
+            )
+        if not (0 < mcfg.attn_window < cfg.max_ctx):
+            raise ValueError(
+                f"backend='ring' serves sliding-window caches; "
+                f"attn_window={mcfg.attn_window} with max_ctx={cfg.max_ctx} "
+                f"is full attention — use backend='paged'"
+            )
+        if mcfg.attn_window < PAGE_TOKENS:
+            raise ValueError(
+                f"attn_window ({mcfg.attn_window}) must hold at least one "
+                f"prefill bucket ({PAGE_TOKENS} tokens)"
+            )
+        if mcfg.decode_staging > 0:
+            raise NotImplementedError(
+                "staged decode caches are not per-slot addressable yet"
+            )
+        if cfg.prefill_mode != "bucketed":
+            raise ValueError(
+                "backend='ring' requires prefill_mode='bucketed' (a padded "
+                "full-length prefill cache cannot adopt into a window ring)"
+            )
+
+    @property
+    def window(self) -> int:
+        return self.mcfg.attn_window
+
+    # ---------------------------------------------------------- device cache
+    def _build_cache(self):
+        cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
+        assert "pos" in cache, "ring backend expects a ring decode cache"
+        cache["len"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
+        return cache
+
+    def adopt_prefill(self, slot_id, pcache, s) -> None:
+        raise NotImplementedError(
+            "ring slots admit via bucketed chunked prefill only"
+        )
+
+    def bind_slot(self, slot_id: int, rid: int) -> None:
+        super().bind_slot(slot_id, rid)
+        # a reused slot still holds the PREVIOUS occupant's ring entries,
+        # and the position mask (kpos >= 0, kpos < kv_valid) cannot tell a
+        # stale in-range position from a real one — unlike a dense cache,
+        # where index==position means old rows are overwritten in order
+        # before they could ever be attended.  Reset the slot's positions
+        # to "unfilled" so the new request starts from an empty window.
+        self._cache["pos"] = self._cache["pos"].at[:, slot_id].set(-1)
+
+    def max_prefill_bucket(self) -> int:
+        # a chunk writes C distinct ring slots; C <= window keeps them
+        # collision-free and the concat-attend chunk path correct
+        return min(self.cfg.max_ctx, self.window)
+
+    def _device_rows(self, t0: int, t1: int):
+        return np.arange(t0, t1) % self.window
+
+    # ------------------------------------------------------- window tracking
+    def _first_storable_token(self, end: int) -> int:
+        # first token of the first FULLY-live page: earlier device rows are
+        # already overwritten by the sliding window
+        dead = max(0, end - self.window)
+        return -(-dead // PAGE_TOKENS) * PAGE_TOKENS
+
+    def _expire_dead_pages(self, st: SlotState, ln: int) -> None:
+        dead_end = max(0, ln - self.window) // PAGE_TOKENS
+        for p in range(st.live_from_page, dead_end):
+            for li in range(self.stored_layers()):
+                for stream in ("k", "v"):
+                    key = PageKey(st.rid, li, p, stream)
+                    for tier, _cols in self._page_targets(key):
+                        tier.store.drop_page(key)
+        st.live_from_page = max(st.live_from_page, dead_end)
+
+    def _can_reactivate(self, st: SlotState, page_idx: int, ln: int) -> bool:
+        # every device row of the page must still be inside the window
+        return page_idx * PAGE_TOKENS >= max(0, ln - self.window)

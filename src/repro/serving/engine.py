@@ -18,6 +18,7 @@ scheduler directly:
 
 from __future__ import annotations
 
+import warnings
 from typing import List
 
 from repro.models.model import Model
@@ -37,7 +38,16 @@ class ServingEngine:
 
     @property
     def store(self):
-        return self.scheduler.store
+        """Deprecated: the memory tier is a pluggable backend now — a
+        sharded deployment has one store PER SHARD, so a single-store
+        accessor cannot describe it.  Use ``engine.scheduler.backend.store``
+        (tier 0) or ``engine.scheduler.backend.tiers``."""
+        warnings.warn(
+            "ServingEngine.store is deprecated; use "
+            "scheduler.backend.store (tier 0) or scheduler.backend.tiers",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.scheduler.backend.store
 
     @property
     def stats(self):

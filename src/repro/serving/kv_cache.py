@@ -206,6 +206,17 @@ class CompressedKVStore:
         for kt in [k for k in self._lru if k[0] == seq_id]:
             self._forget(kt)
 
+    def drop_page(self, key: PageKey) -> bool:
+        """Forget one page without eviction accounting — ring tiers retire
+        pages that slid fully out of the attention window.  Like sequence
+        retirement, the drop moves no bus bytes (the page is dead, not
+        cold); returns whether the page was resident."""
+        kt = key.astuple()
+        if kt not in self._lru:
+            return False
+        self._forget(kt)
+        return True
+
     def sequence_pages(self, seq_id: int) -> list:
         return [k for k in self._lru if k[0] == seq_id]
 

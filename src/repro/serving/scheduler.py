@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler with compressed-KV eviction (ISSUE 1).
+"""Continuous-batching scheduler over a pluggable KV memory tier.
 
 The seed engine ran one synchronous batch: every request was padded to the
 longest prompt and decoded to the longest ``max_new_tokens``, and the
@@ -12,9 +12,7 @@ with the serving loop the paper's accounting actually pays off in:
   KV pages) the step it finishes instead of riding along with the longest
   request.
 
-* **Bucketed chunked prefill (ISSUE 3).**  Admission no longer left-pads the
-  prompt to an alignment and runs one monolithic prefill per distinct padded
-  length (one ``jax.jit`` compile each).  Prompts are processed in
+* **Bucketed chunked prefill (ISSUE 3).**  Prompts are processed in
   page-aligned chunks whose sizes come from a power-of-two bucket set, so at
   most ``log2(max_ctx)`` prefill variants ever compile; each chunk appends
   directly into the slot's rows (``models.transformer.lm_prefill_chunk``)
@@ -23,13 +21,7 @@ with the serving loop the paper's accounting actually pays off in:
   Chunking also overlaps admission with decode: while other slots decode, a
   joining prompt advances ``prefill_chunks_per_step`` chunks per step
   (double-buffered slot join), so a long admission never stalls the batch.
-  The legacy left-pad path survives as ``prefill_mode="padded"`` — the
-  baseline the serving benchmark compares against.
-
-* **Per-slot cache lengths.**  The device KV cache is one fixed
-  (L, max_batch, max_ctx, Hkv, hd) buffer; ``cache["len"]`` is a (B,) vector
-  so each slot decodes at its own position against its own valid prefix
-  (models/attention per-row append path).
+  The legacy left-pad path survives as ``prefill_mode="padded"``.
 
 * **Per-request sampling streams.**  The scheduler holds ONE base PRNG key
   (``EngineConfig.rng_seed``); request ``rid`` samples from
@@ -37,44 +29,42 @@ with the serving loop the paper's accounting actually pays off in:
   tokens never depend on batch composition or on seeds passed for other
   requests mid-flight.
 
-* **Compressed tier under memory pressure.**  Every page a sequence
-  completes (prefill pages as chunks land, decode pages as they fill) is
-  written through :class:`~repro.serving.kv_cache.CompressedKVStore`, whose
-  ``max_stored_bytes`` budget LRU-evicts cold pages.  Ragged prompt tails
-  are stored as exact-length pages (``valid_tokens``), so capacity and
-  bandwidth savings are quoted over pad-free logical bytes only.  Each
-  decode step charges the bandwidth of fetching every stored page of every
-  active slot at its ladder-assigned plane count (Fig. 5 partial-plane
-  fetch); an evicted page that is touched again is re-activated — re-
-  compressed from the device working set (a charged kv_write) — so thrash
-  shows up in the numbers instead of silently disappearing.
+* **Pluggable memory tier (ISSUE 4).**  The scheduler owns NO memory state:
+  every page write, decode fetch, eviction re-activation, ladder-plane
+  assignment, retirement cleanup, engine tick and savings report goes
+  through the :class:`~repro.serving.backends.KVBackend` protocol
+  (``EngineConfig.backend``):
 
-* **Quest ladder re-ranking.**  At admission and at every page boundary the
-  slot's pages are re-scored against the newest query proxy and the
-  precision ladder re-assigned, so plane counts track context as it grows
-  (context-dependent dynamic quantization, paper §II.C).
+  - ``"paged"``   — single-device compressed paged tier (bit-exact with the
+    pre-backend scheduler; the conformance suite pins it);
+  - ``"sharded"`` — per-shard slot map + compressed tier + lane budget,
+    pages routed by KV-head ownership via the runtime/sharding mesh rules;
+  - ``"ring"``    — per-slot sliding-window ring caches, so Mixtral-family
+    configs join continuous batching.
 
-* **Finite-throughput engine (ISSUE 2).**  No (de)compression happens
-  inline on the step path any more: page writes, decode fetches, and
-  re-activations are *submitted* to the
-  :class:`~repro.memctl.CompressionEngineRuntime` — the paper's 32 x
-  512 Gb/s lane engine as a cycle-approximate runtime — and serviced once
-  per step in strict priority order (decode fetch > KV write > background
-  re-compress) within the lane pool's per-step byte budget.  Decode-fetch
-  jobs are *sized at service time* (``Job.size_fn``), so a ladder
-  re-assignment between submit and service cannot make the lane-pool bytes
-  and the controller's kv_read bytes disagree.  ``run_until_drained`` keeps
-  ticking after the last retirement until the engine backlog (e.g. eviction
-  write-backs) empties, so ``report()`` never underquotes utilization.
+  The backend schedules *all* (de)compression on the finite-throughput
+  memctl engine (ISSUE 2): jobs are serviced once per step in strict
+  priority order (decode fetch > KV write > background re-compress) within
+  each tier's lane budget, decode fetches are sized at service time, and
+  ``run_until_drained`` keeps ticking until the backlog empties.
 
-Scope: families with a plain dense decode cache ({"k","v","len"}; dense/moe,
-full attention, no staging ring).  ``engine.ServingEngine`` keeps the old
-one-shot ``run()`` as a thin submit+drain wrapper.
+* **Admission backpressure (ISSUE 4 satellite).**  When the engine's
+  modeled service latency runs more than ``admit_latency_ns_max`` ns behind
+  the wall clock (``backend.admit_pressure_ns()``), new admissions are
+  deferred — waiting requests stay queued until the lanes catch up — and
+  ``report()`` counts the shed/deferred admits (``admits_deferred``,
+  ``backpressure_steps``).
+
+Scope: dense-cache families ({"k","v","len"}; dense/moe).  Sliding-window
+(ring) caches are served by ``backend="ring"``; staged decode caches still
+raise.  ``engine.ServingEngine`` keeps the old one-shot ``run()`` as a thin
+submit+drain wrapper.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import weakref
 from collections import deque
@@ -84,29 +74,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression import default_codec
-from repro.core.compressed_store import StoreConfig
 from repro.core.controller import MemoryController
-from repro.core.quantization import (
-    PrecisionLadder,
-    assign_page_precision,
-    page_minmax,
-    quest_scores,
-)
-from repro.memctl import (
-    CompressionEngineRuntime,
-    Job,
-    JobClass,
-    MemCtlConfig,
-)
+from repro.core.quantization import PrecisionLadder
+from repro.memctl import MemCtlConfig
 from repro.models.model import Model
-from repro.serving.kv_cache import (
-    PAGE_TOKENS,
-    CompressedKVStore,
-    PageEvictedError,
-    PageKey,
-    iter_page_chunks,
-)
+from repro.serving.backends import make_backend
+from repro.serving.kv_cache import PAGE_TOKENS
 from repro.serving.sampler import SamplerConfig, sample, sample_slots
 
 
@@ -138,7 +111,8 @@ class EngineConfig:
     sampler: SamplerConfig = SamplerConfig()
     ladder: Optional[PrecisionLadder] = None  # None = full precision
     store_kv_compressed: bool = True
-    #: compressed-tier byte budget (None = unbounded, the seed behaviour)
+    #: compressed-tier byte budget (None = unbounded, the seed behaviour);
+    #: sharded backends split it evenly across shards
     max_stored_bytes: Optional[int] = None
     #: cap on layers written through the compressed store (cost cap; None=all)
     store_layers: Optional[int] = 4
@@ -150,8 +124,8 @@ class EngineConfig:
     codec: Optional[str] = None
     #: (de)compression-engine geometry + per-step service window (memctl
     #: runtime).  ``MemCtlConfig(step_cycles=None)`` models the pre-memctl
-    #: unbounded engine; ``engine=None`` on the nested config's ``engine``
-    #: field follows ``codec``
+    #: unbounded engine; sharded backends instantiate this geometry PER
+    #: SHARD (scale-out silicon, summed in the report)
     engine: MemCtlConfig = MemCtlConfig()
     #: 'bucketed' — chunked prefill over power-of-two length buckets
     #: (<= log2(max_ctx) compiles, pad-free cache/store/accounting);
@@ -165,6 +139,22 @@ class EngineConfig:
     prefill_chunks_per_step: int = 1
     #: base sampling seed; request streams are fold_in(PRNGKey(seed), rid)
     rng_seed: int = 0
+    #: memory-tier policy behind the KVBackend protocol:
+    #: 'paged' | 'sharded' | 'ring'.  The default honours the
+    #: REPRO_SERVING_BACKEND env var so CI can run the whole scheduler
+    #: suite against another tier without editing tests.
+    backend: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_SERVING_BACKEND",
+                                               "paged")
+    )
+    #: shard count for backend='sharded' (shards=1 is bit-exact with
+    #: 'paged'; the conformance suite asserts it)
+    shards: int = 2
+    #: admission backpressure threshold: defer new admits while the
+    #: engine's modeled service latency lags the wall clock by more than
+    #: this many ns (None = admit regardless, the pre-backpressure
+    #: behaviour)
+    admit_latency_ns_max: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -178,13 +168,6 @@ class _Slot:
     draws: int = 0  # tokens sampled so far from this stream
     prefill_pos: int = 0  # prompt tokens already appended to the slot rows
     prefilling: bool = True  # still consuming prompt chunks (no decode yet)
-    #: device tokens [0, stored_tokens) have been submitted to the
-    #: compressed store (exact-length tail pages included); fetch accounting
-    #: and re-activation range over exactly these pages
-    stored_tokens: int = 0
-    #: ladder plane count per page index (filled by _assign_ladder_planes;
-    #: consulted on re-activation so evicted pages keep their precision)
-    page_planes: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 def prefill_buckets(max_ctx: int) -> List[int]:
@@ -223,39 +206,6 @@ def chunk_schedule(prompt_len: int, buckets: List[int]) -> List[tuple]:
     return out
 
 
-def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
-                   key: PageKey, seq_id: int) -> Job:
-    """Decode-critical fetch with SERVICE-TIME sizing.
-
-    The plane count is resolved exactly once — by ``size_fn`` when the
-    engine starts servicing the job — and the completion ``fn`` charges the
-    controller's kv_read at that same resolved count, so the lane-pool
-    bytes and the accounting can never disagree across a ladder
-    re-assignment (or an eviction) that lands between submit and service.
-    """
-    plan: dict = {}
-
-    def size() -> int:
-        if not store.contains(key):
-            store.note_miss()  # keep the store's counters honest too
-            return 0  # evicted since submit; fn counts the scheduler miss
-        nbytes, keep = store.fetch_plan(key)
-        plan["keep"] = keep
-        return nbytes
-
-    def fn() -> None:
-        if "keep" not in plan:
-            stats["kv_fetch_misses"] += 1
-            return
-        try:
-            store.account_fetch(key, keep_planes=plan["keep"])
-        except PageEvictedError:
-            stats["kv_fetch_misses"] += 1
-
-    return Job(JobClass.DECODE_FETCH, 0, fn=fn, key=key.astuple(),
-               seq_id=seq_id, size_fn=size)
-
-
 #: jitted prefill/decode/chunk shared across schedulers of the same model
 #: instance, so compile time is paid once (benchmarks compare modes on
 #: equal footing when they reuse one model object — and build fresh model
@@ -275,25 +225,15 @@ def _jitted(model: Model):
 
 
 class ContinuousScheduler:
-    """Admission queue + slot map + in-flight join/retire serving loop."""
+    """Admission queue + slot map + in-flight join/retire serving loop.
+
+    All memory-tier traffic flows through ``self.backend`` (a
+    :class:`~repro.serving.backends.KVBackend`); the scheduler itself holds
+    no store, no controller, no engine and never indexes into the device
+    cache dict — it only passes the opaque cache between jitted calls."""
 
     def __init__(self, model: Model, params, cfg: EngineConfig,
                  controller: MemoryController | None = None):
-        mcfg = model.cfg
-        if mcfg.family not in ("dense", "moe"):
-            raise NotImplementedError(
-                f"continuous batching supports dense-cache families, got "
-                f"{mcfg.family!r} (use family-specific engines for "
-                f"ssm/hybrid/encdec)"
-            )
-        if 0 < mcfg.attn_window < cfg.max_ctx:
-            raise NotImplementedError(
-                "sliding-window ring caches are not per-slot addressable yet"
-            )
-        if mcfg.decode_staging > 0:
-            raise NotImplementedError(
-                "decode staging rings conflict with per-slot lengths"
-            )
         if cfg.prefill_mode not in ("bucketed", "padded"):
             raise ValueError(
                 f"prefill_mode must be 'bucketed' or 'padded', "
@@ -311,50 +251,6 @@ class ContinuousScheduler:
         self.model = model
         self.params = params
         self.cfg = cfg
-        codec = cfg.codec or default_codec()
-        store_cfg = StoreConfig(codec=codec)
-        # accounting-only by default: one event per resident page per decode
-        # step would grow without bound on long runs; pass a controller with
-        # retain_events=True to capture a replayable DRAM trace
-        if controller is None:
-            controller = MemoryController(store_cfg, retain_events=False)
-        elif cfg.codec is None:
-            # no explicit codec: follow the caller's controller so the pages
-            # it compresses match the store config and modeled lane silicon
-            codec = controller.config.codec
-            store_cfg = controller.config
-        else:
-            # explicit codec wins end to end — a passed controller must not
-            # silently compress with a different codec than the one the
-            # report's store/silicon numbers are quoted for
-            controller.config = store_cfg
-        self.controller = controller
-        mc = cfg.engine
-        if mc.engine is None:  # lane silicon follows the serving codec
-            # Table IV only characterises lz4/zstd lanes; any other
-            # registered codec falls back to the cheaper lz4 silicon
-            mc = dataclasses.replace(
-                mc, engine=codec if codec in ("lz4", "zstd") else "lz4"
-            )
-        self.engine = CompressionEngineRuntime(mc)
-        self.controller.attach_engine_clock(self.engine.clock)
-        self.store = CompressedKVStore(
-            config=store_cfg, max_stored_bytes=cfg.max_stored_bytes,
-            controller=self.controller, engine=self.engine,
-        )
-        self._prefill, self._decode, self._prefill_chunk = _jitted(model)
-        # chunked admission needs the chunk kernel; families without one
-        # (none today among dense/moe) fall back to the padded path
-        self._mode = (cfg.prefill_mode if self._prefill_chunk is not None
-                      else "padded")
-        self._buckets = prefill_buckets(cfg.max_ctx)
-        self._prefill_shapes: set = set()  # distinct compiled variants asked
-        self._waiting: Deque[Request] = deque()
-        self._slots: List[Optional[_Slot]] = [None] * cfg.max_batch
-        self._lens = np.zeros(cfg.max_batch, np.int32)
-        self._cache = None  # built on first admission
-        self._base_key = jax.random.PRNGKey(cfg.rng_seed)
-        self._zero_key = jax.random.PRNGKey(0)  # filler for idle slot rows
         self.step_count = 0
         self.stats: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0,
@@ -366,8 +262,44 @@ class ContinuousScheduler:
             "kv_fetch_misses": 0, "kv_fetch_deferrals": 0,
             "engine_jobs_cancelled": 0,
             "kv_peak_stored_bytes": 0, "kv_peak_logical_bytes": 0,
+            "admits_deferred": 0, "backpressure_steps": 0,
             "prefill_s": 0.0, "decode_s": 0.0,
         }
+        # the memory tier: store(s) + controller(s) + lane engine(s) live
+        # behind the protocol; the backend mutates the shared stats dict
+        self.backend = make_backend(model, cfg, controller=controller,
+                                    stats=self.stats)
+        self._prefill, self._decode, self._prefill_chunk = _jitted(model)
+        # chunked admission needs the chunk kernel; families without one
+        # (none today among dense/moe) fall back to the padded path
+        self._mode = (cfg.prefill_mode if self._prefill_chunk is not None
+                      else "padded")
+        self._buckets = prefill_buckets(
+            min(cfg.max_ctx, self.backend.max_prefill_bucket())
+        )
+        self._prefill_shapes: set = set()  # distinct compiled variants asked
+        self._waiting: Deque[Request] = deque()
+        self._slots: List[Optional[_Slot]] = [None] * cfg.max_batch
+        self._lens = np.zeros(cfg.max_batch, np.int32)
+        self._base_key = jax.random.PRNGKey(cfg.rng_seed)
+        self._zero_key = jax.random.PRNGKey(0)  # filler for idle slot rows
+
+    # --------------------------------------------------- compat passthroughs
+    @property
+    def store(self):
+        """Tier-0 compressed store (compat shim; use ``backend.store`` /
+        ``backend.tiers``)."""
+        return self.backend.store
+
+    @property
+    def controller(self):
+        """Tier-0 memory controller (compat shim)."""
+        return self.backend.controller
+
+    @property
+    def engine(self):
+        """Tier-0 compression-engine runtime (compat shim)."""
+        return self.backend.engine
 
     # ------------------------------------------------------------------ queue
     def submit(self, req: Request, rng_seed: int | None = None) -> None:
@@ -402,7 +334,7 @@ class ContinuousScheduler:
         (eviction write-backs, deferred writes) must be serviced before the
         run's utilization/latency report means anything."""
         return (bool(self._waiting) or self.active > 0
-                or len(self.engine.queue) > 0)
+                or self.backend.backlog() > 0)
 
     # ------------------------------------------------------------------- step
     def step(self) -> List[Request]:
@@ -411,20 +343,18 @@ class ContinuousScheduler:
 
         The engine tick is where every (de)compression submitted this step
         — prefill/decode page writes, decode fetches, re-activations — is
-        serviced against the lane pool's per-step budget; leftovers stay
+        serviced against each tier's per-step lane budget; leftovers stay
         queued for later windows."""
-        for slot_id, slot in enumerate(self._slots):
-            if slot is None and self._waiting:
-                self._admit(self._waiting.popleft(), slot_id)
+        self._admit_tick()
         self._prefill_tick()
         if self.decoding == 0:
-            self.engine.tick()    # engine windows track wall steps
+            self.backend.tick()   # engine windows track wall steps
             self.step_count += 1  # idle tick: arrival traces keyed on
             return []             # step_count must still advance time
         self._decode_step()
-        self.engine.tick()
+        self.backend.tick()
         if self.cfg.store_kv_compressed:
-            self._note_peaks()
+            self.backend.note_peaks()
         self.step_count += 1
         return self._retire_finished()
 
@@ -441,9 +371,30 @@ class ContinuousScheduler:
         return -(-prompt_len // align) * align
 
     # -------------------------------------------------------------- admission
+    def _admit_tick(self) -> None:
+        """Fill free slots from the waiting queue — unless the engine's
+        modeled latency lags the wall clock past
+        ``admit_latency_ns_max`` (admission backpressure): then waiting
+        requests stay queued and the deferral is counted, so saturated
+        lanes shed load visibly instead of growing an unserviceable
+        backlog."""
+        if not self._waiting:
+            return
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        if not free:
+            return
+        lim = self.cfg.admit_latency_ns_max
+        if lim is not None and self.backend.admit_pressure_ns() > lim:
+            self.stats["admits_deferred"] += min(len(free), len(self._waiting))
+            self.stats["backpressure_steps"] += 1
+            return
+        for slot_id in free:
+            if not self._waiting:
+                break
+            self._admit(self._waiting.popleft(), slot_id)
+
     def _admit(self, req: Request, slot_id: int) -> None:
-        if self._cache is None:
-            self._cache = self._build_cache()
+        self.backend.ensure_cache()
         prompt = np.asarray(req.prompt, np.int32)
         base = (jax.random.PRNGKey(req.rng_seed)
                 if req.rng_seed is not None else self._base_key)
@@ -452,6 +403,7 @@ class ContinuousScheduler:
             key=jax.random.fold_in(base, req.rid),
         )
         self._lens[slot_id] = 0
+        self.backend.bind_slot(slot_id, req.rid)
         req.admit_step = self.step_count
         if self._mode == "padded":
             self._prefill_padded(slot_id)
@@ -475,9 +427,10 @@ class ContinuousScheduler:
 
     def _prefill_chunk_once(self, slot_id: int) -> None:
         """Run ONE bucketed chunk of this slot's prompt through the chunked
-        prefill kernel, append it into the slot's cache rows, and stream the
-        completed pages to the compressed store.  On the final chunk, sample
-        the first output token from the last REAL position's logits."""
+        prefill kernel, append it into the slot's cache rows, and hand the
+        completed span to the backend for storage.  On the final chunk,
+        sample the first output token from the last REAL position's
+        logits."""
         slot = self._slots[slot_id]
         start = slot.prefill_pos
         bucket, real = next_chunk(len(slot.prompt) - start, self._buckets)
@@ -487,10 +440,11 @@ class ContinuousScheduler:
             tokens[real:] = slot.prompt[-1]
 
         t0 = time.time()
-        logits, self._cache = self._prefill_chunk(
-            self.params, jnp.asarray(tokens[None]), self._cache,
+        logits, cache = self._prefill_chunk(
+            self.params, jnp.asarray(tokens[None]), self.backend.cache,
             jnp.int32(slot_id), jnp.int32(start), jnp.int32(real - 1),
         )
+        self.backend.cache = cache
         logits = jax.block_until_ready(logits)
         self.stats["prefill_s"] += time.time() - t0
         self.stats["prefill_tokens"] += real
@@ -501,13 +455,10 @@ class ContinuousScheduler:
         slot.prefill_pos = start + real
         self._lens[slot_id] = slot.prefill_pos
         final = slot.prefill_pos >= len(slot.prompt)
-        if self.cfg.store_kv_compressed:
-            self._store_prefill_pages(slot_id, final=final)
+        self.backend.on_prefill_progress(slot_id, slot.prefill_pos, final)
         if final:
             slot.prefilling = False
             slot.pending = self._first_token(slot, logits)
-            if self.cfg.store_kv_compressed:
-                self._assign_ladder_planes(slot_id)
 
     def _prefill_padded(self, slot_id: int) -> None:
         """Legacy admission: left-pad to ``prefill_align`` and run one
@@ -531,21 +482,12 @@ class ContinuousScheduler:
         self.stats["prefill_compiles"] = len(self._prefill_shapes)
 
         # join in flight: copy the prefill KV into this slot's rows
-        self._cache["k"] = self._cache["k"].at[:, slot_id, :s].set(pcache["k"][:, 0])
-        self._cache["v"] = self._cache["v"].at[:, slot_id, :s].set(pcache["v"][:, 0])
+        self.backend.adopt_prefill(slot_id, pcache, s)
         self._lens[slot_id] = s
         slot.prefill_pos = s
         slot.prefilling = False
         slot.pending = self._first_token(slot, logits)
-
-        if self.cfg.store_kv_compressed:
-            rid = slot.req.rid
-            k_np, v_np = self._slot_kv_host(slot_id, 0, s)
-            for li in range(k_np.shape[0]):
-                self._submit_sequence_writes(slot_id, rid, li, "k", k_np[li])
-                self._submit_sequence_writes(slot_id, rid, li, "v", v_np[li])
-            slot.stored_tokens = s
-            self._assign_ladder_planes(slot_id)
+        self.backend.on_prefill_progress(slot_id, s, final=True)
 
     def _first_token(self, slot: _Slot, logits) -> int:
         """Draw 0 of the slot's own stream (greedy = argmax, as before)."""
@@ -553,49 +495,6 @@ class ContinuousScheduler:
                      self.cfg.sampler)
         slot.draws = 1
         return int(np.asarray(tok)[0])
-
-    def _store_prefill_pages(self, slot_id: int, final: bool) -> None:
-        """Stream this slot's newly completed prompt KV to the store: full
-        pages as chunks land; on the final chunk also the ragged tail as an
-        exact-length page (valid_tokens < PAGE_TOKENS), so no pad row is
-        ever stored and logical bytes stay pad-free."""
-        slot = self._slots[slot_id]
-        end = (slot.prefill_pos if final
-               else (slot.prefill_pos // PAGE_TOKENS) * PAGE_TOKENS)
-        if end <= slot.stored_tokens:
-            return
-        rid = slot.req.rid
-        first_page = slot.stored_tokens // PAGE_TOKENS
-        k_np, v_np = self._slot_kv_host(slot_id, slot.stored_tokens, end)
-        for li in range(k_np.shape[0]):
-            self._submit_sequence_writes(slot_id, rid, li, "k", k_np[li],
-                                         first_page=first_page)
-            self._submit_sequence_writes(slot_id, rid, li, "v", v_np[li],
-                                         first_page=first_page)
-        slot.stored_tokens = end
-
-    def _build_cache(self):
-        cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
-        assert "k" in cache and "v" in cache and "sk" not in cache and "pos" not in cache
-        cache["len"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
-        return cache
-
-    def _stored_layers(self) -> int:
-        n_layers = self.model.cfg.n_layers
-        cap = self.cfg.store_layers
-        return n_layers if cap is None else min(cap, n_layers)
-
-    def _slot_kv_host(self, slot_id: int, t0: int, t1: int):
-        """Device->host copy of this slot's KV rows [t0, t1) for the stored
-        layers, flattened to (L_stored, tokens, channels) bf16."""
-        import ml_dtypes
-
-        ls = self._stored_layers()
-        k = np.asarray(self._cache["k"][:ls, slot_id, t0:t1], np.float32)
-        v = np.asarray(self._cache["v"][:ls, slot_id, t0:t1], np.float32)
-        t = t1 - t0
-        return (k.reshape(ls, t, -1).astype(ml_dtypes.bfloat16),
-                v.reshape(ls, t, -1).astype(ml_dtypes.bfloat16))
 
     # ----------------------------------------------------------------- decode
     def _decode_step(self) -> None:
@@ -613,12 +512,13 @@ class ContinuousScheduler:
                 # is masked by kv_valid and overwritten by the next prefill
                 # chunk or admission (see models/attention per-slot path)
                 keys.append(self._zero_key)
-        self._cache["len"] = jnp.asarray(self._lens)
+        self.backend.sync_lens(self._lens)
 
         t0 = time.time()
-        logits, self._cache = self._decode(
-            self.params, jnp.asarray(tok), self._cache
+        logits, cache = self._decode(
+            self.params, jnp.asarray(tok), self.backend.cache
         )
+        self.backend.cache = cache
         nxt = np.asarray(sample_slots(jnp.stack(keys), draws, logits,
                                       self.cfg.sampler))
         jax.block_until_ready(nxt)
@@ -635,145 +535,7 @@ class ContinuousScheduler:
             slot.draws += 1
             self._lens[i] += 1
             self.stats["decode_tokens"] += 1
-            if self.cfg.store_kv_compressed:
-                ln = int(self._lens[i])
-                if ln % PAGE_TOKENS == 0:  # a decode page just filled
-                    self._store_page(i, ln // PAGE_TOKENS - 1)
-                    slot.stored_tokens = ln
-                    self._assign_ladder_planes(i)
-                self._account_step_fetch(i)
-
-    # -------------------------------------------------- engine job submission
-    def _submit_page_write(self, slot_id: int, key: PageKey,
-                           chunk: np.ndarray,
-                           valid: int = PAGE_TOKENS) -> None:
-        """Queue one page's compress-and-store on the engine.  The chunk is
-        captured at submit time (the token range is append-only, so it
-        cannot change); the store put — and its charged kv_write — happens
-        when the engine services the job, at the ladder planes assigned by
-        then.  ``valid`` < PAGE_TOKENS marks an exact-length tail page; the
-        job is sized by its pad-free bytes."""
-        slot = self._slots[slot_id]
-
-        def fn(key=key, chunk=chunk, slot=slot, valid=valid):
-            self.store.put_page(key, chunk,
-                                planes=slot.page_planes.get(key.page_idx),
-                                valid_tokens=valid)
-
-        self.engine.submit(Job(JobClass.KV_WRITE, chunk[:valid].nbytes,
-                               fn=fn, key=key.astuple(), seq_id=key.seq_id))
-
-    def _submit_sequence_writes(self, slot_id: int, rid: int, layer: int,
-                                stream: str, kv: np.ndarray,
-                                first_page: int = 0) -> None:
-        """Page-split ``kv`` (tokens, channels) and queue one write job per
-        page (same split/tail-pad as ``CompressedKVStore.put_sequence``)."""
-        for p, chunk, valid in iter_page_chunks(kv, first_page):
-            self._submit_page_write(
-                slot_id, PageKey(rid, layer, p, stream), chunk, valid=valid
-            )
-
-    def _store_page(self, slot_id: int, page_idx: int) -> None:
-        rid = self._slots[slot_id].req.rid
-        t0, t1 = page_idx * PAGE_TOKENS, (page_idx + 1) * PAGE_TOKENS
-        k_np, v_np = self._slot_kv_host(slot_id, t0, t1)
-        for li in range(k_np.shape[0]):
-            self._submit_sequence_writes(slot_id, rid, li, "k", k_np[li],
-                                         first_page=page_idx)
-            self._submit_sequence_writes(slot_id, rid, li, "v", v_np[li],
-                                         first_page=page_idx)
-
-    def _assign_ladder_planes(self, slot_id: int) -> None:
-        """Re-rank this slot's full pages against the newest query proxy and
-        record the ladder's plane count on every stored page (all layers
-        share the last layer's ranking, as the seed engine did).  A ragged
-        stored tail page keeps full precision until it fills."""
-        ladder = self.cfg.ladder
-        if ladder is None:
-            return
-        ln = int(self._lens[slot_id])
-        n_pages = ln // PAGE_TOKENS
-        if n_pages == 0:
-            return
-        rid = self._slots[slot_id].req.rid
-        k_last = self._cache["k"][-1, slot_id, : n_pages * PAGE_TOKENS]
-        kmin, kmax = page_minmax(k_last, PAGE_TOKENS)
-        q_proxy = self._cache["k"][-1, slot_id, ln - 1]  # newest key as proxy
-        planes = assign_page_precision(quest_scores(q_proxy, kmin, kmax), ladder)
-        mean_planes = np.asarray(jnp.mean(planes.astype(jnp.float32), axis=1))
-        spec_bits = self.store.spec.bits
-        slot = self._slots[slot_id]
-        for p in range(n_pages):
-            keep = int(round(float(mean_planes[p])))
-            keep = max(1, min(spec_bits, keep))
-            slot.page_planes[p] = keep
-            for li in range(self._stored_layers()):
-                for stream in ("k", "v"):
-                    self.store.set_planes(PageKey(rid, li, p, stream), keep)
-
-    def _account_step_fetch(self, slot_id: int) -> None:
-        """Queue this decode step's KV traffic for one slot as
-        decode-critical fetch jobs: every stored-resident page at its ladder
-        planes, sized at SERVICE time (see :func:`make_fetch_job`).  Evicted
-        pages queue a background re-activation instead (a re-compress write,
-        charged once when the engine services it — possibly steps later
-        under load); pages whose write or re-activation is still queued are
-        skipped, since their ground truth is still the device working set
-        and no compressed-tier copy exists to fetch.  The page range comes
-        from the slot's ``stored_tokens`` watermark, so a decode-growing
-        tail page that was never stored is not phantom-fetched."""
-        slot = self._slots[slot_id]
-        rid = slot.req.rid
-        n_pages = -(-slot.stored_tokens // PAGE_TOKENS)
-        for li in range(self._stored_layers()):
-            for stream in ("k", "v"):
-                for p in range(n_pages):
-                    key = PageKey(rid, li, p, stream)
-                    if self.store.contains(key):
-                        self.engine.submit(
-                            make_fetch_job(self.store, self.stats, key, rid)
-                        )
-                    elif (self.engine.pending(key.astuple(), JobClass.KV_WRITE)
-                          or self.engine.pending(key.astuple(),
-                                                 JobClass.BACKGROUND)):
-                        # write or re-activation already queued — only those
-                        # classes restore the page; a stale queued fetch
-                        # must not suppress the re-activation
-                        self.stats["kv_fetch_deferrals"] += 1
-                    else:
-                        self._reactivate(slot_id, key)
-
-    def _reactivate(self, slot_id: int, key: PageKey) -> None:
-        """An evicted page is needed again: queue a background re-compress
-        from the device working set, keeping the plane count the ladder last
-        assigned.  The page data is captured at submit time (append-only
-        token range) and the kv_write is charged exactly once, when the
-        engine services the job.  A ragged stored tail re-activates at its
-        exact valid length."""
-        slot = self._slots[slot_id]
-        t0 = key.page_idx * PAGE_TOKENS
-        valid = min(PAGE_TOKENS, slot.stored_tokens - t0)
-        k_np, v_np = self._slot_kv_host(slot_id, t0, t0 + valid)
-        kv = k_np[key.layer] if key.stream == "k" else v_np[key.layer]
-        _, page, valid = next(iter_page_chunks(kv))
-
-        def fn(key=key, page=page, valid=valid, slot=slot):
-            self.store.put_page(key, page,
-                                planes=slot.page_planes.get(key.page_idx),
-                                valid_tokens=valid)
-            self.stats["kv_reactivations"] += 1
-
-        self.engine.submit(Job(JobClass.BACKGROUND, kv.nbytes, fn=fn,
-                               key=key.astuple(), seq_id=key.seq_id))
-
-    def _note_peaks(self) -> None:
-        fp = self.store.footprint()
-        self.stats["kv_peak_stored_bytes"] = max(
-            self.stats["kv_peak_stored_bytes"], fp["stored_bytes"]
-        )
-        self.stats["kv_peak_logical_bytes"] = max(
-            self.stats["kv_peak_logical_bytes"], fp["logical_bytes"]
-        )
+            self.backend.on_decode_token(i, int(self._lens[i]))
 
     # ----------------------------------------------------------------- retire
     def _retire_finished(self) -> List[Request]:
@@ -791,14 +553,12 @@ class ContinuousScheduler:
                     r.truncated = True
                     self.stats["requests_truncated"] += 1
                 r.finish_step = self.step_count
-                # queued work for a retired request is dead: cancel before
-                # dropping pages so the engine never services stale jobs
-                # (eviction write-backs carry seq_id=None and survive — the
-                # stream-out is committed work the drain loop services)
-                self.stats["engine_jobs_cancelled"] += (
-                    self.engine.cancel_seq(r.rid)
-                )
-                self.store.drop_sequence(r.rid)
+                # queued work for a retired request is dead: the backend
+                # cancels it (shard-scoped) before dropping pages, so no
+                # engine ever services stale jobs (eviction write-backs
+                # carry seq_id=None and survive — committed work the drain
+                # loop services)
+                self.backend.retire(i, r.rid)
                 self._slots[i] = None
                 self._lens[i] = 0
                 self.stats["requests_completed"] += 1
@@ -808,43 +568,25 @@ class ContinuousScheduler:
     # ----------------------------------------------------------------- report
     def report(self) -> dict:
         s = dict(self.stats)
-        w_log, w_phys = self.controller.stats.kind_bytes("kv_write")
-        r_log, r_phys = self.controller.stats.kind_bytes("kv_read")
-        s["kv_logical_bytes"] = w_log
-        s["kv_stored_bytes"] = w_phys
-        s["kv_fetch_logical"] = r_log
-        s["kv_fetch_physical"] = r_phys
-        if w_log:
-            s["kv_capacity_saving"] = 1 - w_phys / w_log
-        if r_log:
-            s["kv_bandwidth_saving"] = 1 - r_phys / r_log
+        # memory-tier half (savings, evictions, engine-limited numbers) —
+        # aggregated across the backend's tiers
+        s.update(self.backend.report())
         if s["decode_s"]:
             s["decode_tok_per_s"] = s["decode_tokens"] / s["decode_s"]
         if s["decode_steps"]:
             s["mean_batch_occupancy"] = (
                 s["decode_batch_occupancy"] / s["decode_steps"]
             )
-        fp = self.store.footprint()
-        s["kv_evictions"] = fp["evictions"]
-        s["kv_evicted_bytes"] = fp["evicted_bytes"]
-        s["kv_resident_stored_bytes"] = fp["stored_bytes"]
-        # engine-limited numbers: what the modeled silicon actually sustained
-        er = self.engine.report()
-        s["engine"] = er
-        s["engine_utilization"] = er["utilization"]
-        s["engine_modeled_latency_ns"] = er["modeled_latency_ns"]
-        s["engine_deferred_jobs"] = er["deferred_job_steps"]
-        s["engine_queue_depth_p99"] = er["queue_depth"]["p99"]
         # steady-state accounting: normalise per 1k requests, not per batch
         n = s["requests_completed"]
         if n:
             per = 1000.0 / n
             s["per_1k_requests"] = {
-                "kv_stored_bytes": w_phys * per,
-                "kv_logical_bytes": w_log * per,
-                "kv_fetch_physical": r_phys * per,
-                "kv_fetch_logical": r_log * per,
-                "kv_evicted_bytes": fp["evicted_bytes"] * per,
+                "kv_stored_bytes": s["kv_stored_bytes"] * per,
+                "kv_logical_bytes": s["kv_logical_bytes"] * per,
+                "kv_fetch_physical": s["kv_fetch_physical"] * per,
+                "kv_fetch_logical": s["kv_fetch_logical"] * per,
+                "kv_evicted_bytes": s["kv_evicted_bytes"] * per,
                 "decode_tokens": s["decode_tokens"] * per,
             }
         return s

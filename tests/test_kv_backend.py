@@ -1,0 +1,407 @@
+"""KVBackend conformance suite (ISSUE 4).
+
+One serving API, three memory tiers: every backend must decode exactly what
+the plain model loop decodes, ``ShardedBackend(shards=1)`` must be
+bit-exact with ``PagedBackend`` (tokens AND byte accounting), eviction
+re-activations must charge exactly one kv_write per tier, and the pad-free
+savings invariant must hold whichever tier is behind the scheduler.  Plus
+the satellites: shard-scoped job cancellation, admission backpressure, ring
+live-window page retirement.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.quantization import PrecisionLadder
+from repro.memctl import Job, JobClass, MemCtlConfig, PriorityJobQueue
+from repro.models.model import build_model, prepare_decode_cache
+from repro.serving import ContinuousScheduler, EngineConfig, Request
+from repro.serving.backends import BACKENDS, make_backend
+from repro.serving.kv_cache import PAGE_TOKENS
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def ring_model():
+    """Sliding-window variant of the smoke config (Mixtral-shaped cache)."""
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              attn_window=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompt(n, offset=0):
+    return ((np.arange(n) + offset) % 500).astype(np.int32)
+
+
+def _reference_greedy(model, params, prompt, n_new, max_ctx):
+    """The pre-scheduler decode loop: one-shot prefill + step-wise greedy
+    decode straight against the model — the ground truth every backend's
+    served tokens must reproduce."""
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(prompt[None])}
+    )
+    cache = prepare_decode_cache(model.cfg, cache, max_ctx)
+    dec = jax.jit(model.decode)
+    out = []
+    tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+    for _ in range(n_new):
+        out.append(tok)
+        logits, cache = dec(params, jnp.asarray([tok], jnp.int32), cache)
+        tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+    return out
+
+
+def _serve(model, params, cfg, prompts, max_new):
+    sched = ContinuousScheduler(model, params, cfg)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+    assert all(r.done for r in reqs)
+    return sched, reqs
+
+
+BACKEND_CASES = [("paged", 1), ("sharded", 1), ("sharded", 2)]
+LADDER = PrecisionLadder([(2, 16), (2, 8), (-1, 4)])
+
+
+def _cfg(backend, shards, **kw):
+    return EngineConfig(max_batch=4, max_ctx=192, backend=backend,
+                        shards=shards, store_layers=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Decoded-token conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,shards", BACKEND_CASES)
+def test_backend_decodes_match_model_loop(smoke_model, backend, shards):
+    """Whatever tier sits behind the scheduler, served greedy tokens equal
+    the plain model loop's (the pre-refactor paged path's contract)."""
+    model, params = smoke_model
+    prompts = [_prompt(37), _prompt(80, 11)]
+    sched, reqs = _serve(model, params, _cfg(backend, shards, ladder=LADDER),
+                         prompts, max_new=6)
+    for r, p in zip(reqs, prompts):
+        assert r.output == _reference_greedy(model, params, p, 6, 192), (
+            backend, shards, r.rid
+        )
+
+
+def test_sharded_one_is_bit_exact_with_paged(smoke_model):
+    """ISSUE 4 acceptance: ShardedBackend(shards=1) == PagedBackend, tokens
+    AND byte accounting."""
+    model, params = smoke_model
+    prompts = [_prompt(24), _prompt(90, 3), _prompt(50, 7)]
+
+    def run(backend, shards):
+        sched, reqs = _serve(
+            model, params,
+            _cfg(backend, shards, ladder=LADDER, max_stored_bytes=48 * 1024),
+            prompts, max_new=8,
+        )
+        return sched.report(), [r.output for r in reqs]
+
+    rep_p, out_p = run("paged", 1)
+    rep_s, out_s = run("sharded", 1)
+    assert out_p == out_s
+    for key in ("kv_logical_bytes", "kv_stored_bytes", "kv_fetch_logical",
+                "kv_fetch_physical", "kv_evictions", "kv_evicted_bytes",
+                "kv_reactivations", "kv_fetch_misses", "kv_fetch_deferrals",
+                "engine_jobs_cancelled", "kv_peak_stored_bytes"):
+        assert rep_p[key] == rep_s[key], key
+
+
+# ---------------------------------------------------------------------------
+# Accounting invariants, per backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,shards", BACKEND_CASES)
+def test_pad_free_savings_invariant(smoke_model, backend, shards):
+    """Logical bytes are quoted over REAL tokens only — an exact-length
+    ragged tail never inflates them, whichever tier stores the pages (a
+    sharded tier's channel slices must sum back to the full page)."""
+    model, params = smoke_model
+    n = 37  # 2 full pages + a 5-token ragged tail
+    sched = ContinuousScheduler(model, params, _cfg(backend, shards))
+    sched.submit(Request(rid=0, prompt=_prompt(n), max_new_tokens=8))
+    sched.step()  # idle scheduler: full admission + first decode token
+    cache = sched.backend.cache
+    ch = cache["k"].shape[-2] * cache["k"].shape[-1]
+    per_tok = 2 * ch * 2  # k+v streams, bf16
+    logical = sum(t.store.footprint()["logical_bytes"]
+                  for t in sched.backend.tiers)
+    assert logical == 2 * n * per_tok  # store_layers=2, pad-free
+
+
+@pytest.mark.parametrize("backend,shards", BACKEND_CASES)
+def test_eviction_reactivation_charged_exactly_once(smoke_model, backend,
+                                                    shards):
+    """Every kv_write event on every tier is exactly one serviced KV_WRITE
+    job or one serviced re-activation — eviction write-backs (occupancy
+    only) never inflate the count, and a deferred re-activation is charged
+    once no matter how many steps it waits."""
+    model, params = smoke_model
+    cfg = _cfg(backend, shards, ladder=LADDER, max_stored_bytes=10 * 1024,
+               engine=MemCtlConfig(lanes=2, step_cycles=512))
+    sched, reqs = _serve(model, params, cfg, [_prompt(80), _prompt(80, 3)],
+                         max_new=16)
+    rep = sched.report()
+    assert rep["kv_evictions"] > 0
+    assert rep["kv_reactivations"] > 0
+    n_writes = sum(t.controller.stats.kind_count("kv_write")
+                   for t in sched.backend.tiers)
+    serviced_writes = sum(t.engine.stats.serviced_jobs["KV_WRITE"]
+                          for t in sched.backend.tiers)
+    assert n_writes == serviced_writes + rep["kv_reactivations"]
+
+
+def test_scheduler_has_no_direct_store_or_cache_access():
+    """ISSUE 4 acceptance, pinned at the source level: the scheduler module
+    neither touches CompressedKVStore nor indexes into the device cache
+    dict — all memory traffic goes through the KVBackend protocol."""
+    import inspect
+
+    from repro.serving import scheduler as sched_mod
+
+    src = inspect.getsource(sched_mod)
+    assert "CompressedKVStore" not in src
+    assert "MemoryController(" not in src
+    assert "CompressionEngineRuntime" not in src
+    for forbidden in ('cache["k"]', 'cache["v"]', "_slot_kv_host",
+                      "store.put", "store.account", "store.drop"):
+        assert forbidden not in src, forbidden
+
+
+def test_make_backend_rejects_unknown_name(smoke_model):
+    model, params = smoke_model
+    with pytest.raises(ValueError, match="unknown KV backend"):
+        ContinuousScheduler(model, params,
+                            EngineConfig(max_ctx=64, backend="nvme"))
+    assert set(BACKENDS) == {"paged", "sharded", "ring"}
+
+
+# ---------------------------------------------------------------------------
+# Sharded routing + shard-scoped cancellation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_routes_follow_mesh_rules(smoke_model):
+    """Hkv=2 divides shards=2 -> KV-head ownership (channel slices); a
+    shard count the heads can't divide falls back to the sequence axis
+    (block-cyclic pages) exactly like _kv_spec's context-parallel rule."""
+    model, params = smoke_model
+    head = make_backend(model, _cfg("sharded", 2))
+    assert head._route == "head" and len(head.tiers) == 2
+    seq = make_backend(model, _cfg("sharded", 3))  # 2 % 3 != 0; 192 % 3 == 0
+    assert seq._route == "seq"
+    with pytest.raises(ValueError, match="divides neither"):
+        make_backend(model, EngineConfig(max_batch=4, max_ctx=100,
+                                         prefill_mode="padded",
+                                         backend="sharded", shards=7))
+
+
+def test_queue_cancellation_is_shard_scoped():
+    """Retire-time cancellation keys on the full (shard, rid) scope:
+    cancelling rid 7's work on shard 0 must not touch the same-rid job
+    queued for shard 1 (the cross-shard write-back bug)."""
+    q = PriorityJobQueue()
+    q.push(Job(JobClass.KV_WRITE, 64, key=("p", 0), seq_id=(0, 7)))
+    q.push(Job(JobClass.KV_WRITE, 64, key=("p", 1), seq_id=(1, 7)))
+    q.push(Job(JobClass.BACKGROUND, 64, key=("e", 0), seq_id=None))
+    assert q.cancel_seq((0, 7)) == 1
+    assert q.pending(("p", 1), JobClass.KV_WRITE)  # shard 1's job survives
+    assert q.pending(("e", 0), JobClass.BACKGROUND)  # committed work survives
+    assert q.cancel_seq(7) == 0  # bare-rid cancel can't reach scoped jobs
+
+
+def test_sharded_retire_cancels_on_every_shard_without_crosstalk(smoke_model):
+    """End to end: a retiring request's queued jobs are cancelled on all of
+    ITS scopes while another in-flight request's jobs survive on every
+    shard."""
+    model, params = smoke_model
+    cfg = _cfg("sharded", 2, engine=MemCtlConfig(lanes=1, step_cycles=16))
+    sched = ContinuousScheduler(model, params, cfg)
+    a = Request(rid=0, prompt=_prompt(40), max_new_tokens=2)
+    b = Request(rid=1, prompt=_prompt(40, 5), max_new_tokens=30)
+    sched.submit(a)
+    sched.submit(b)
+    while not a.done:
+        sched.step()
+    # a retired with a tiny engine window: its jobs were cancelled from both
+    # shard queues, b's queued writes survive on both shards
+    for tier in sched.backend.tiers:
+        for q in tier.engine.queue._queues.values():
+            assert all(job.seq_id in (None, (tier.index, 1)) for job in q)
+    assert sched.stats["engine_jobs_cancelled"] > 0
+    sched.run_until_drained()
+    assert b.done
+
+
+# ---------------------------------------------------------------------------
+# Admission backpressure (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_backpressure_defers_and_recovers(smoke_model):
+    """With the lane engine saturated past admit_latency_ns_max, a new
+    submit waits in the queue (counted), then admits once the backlog
+    drains; without a threshold it admits immediately."""
+    model, params = smoke_model
+
+    def run(limit):
+        # paged pinned: the deferral logic is backend-independent scheduler
+        # code, but the trip point depends on total lane count — sharded
+        # instantiates the 1-lane geometry PER SHARD and halves the
+        # pressure, so the threshold is calibrated for one tier
+        sched = ContinuousScheduler(model, params, EngineConfig(
+            max_batch=2, max_ctx=192, store_layers=2, backend="paged",
+            engine=MemCtlConfig(lanes=1, step_cycles=64),
+            admit_latency_ns_max=limit,
+        ))
+        a = Request(rid=0, prompt=_prompt(80), max_new_tokens=12)
+        b = Request(rid=1, prompt=_prompt(40, 5), max_new_tokens=4)
+        sched.submit(a)
+        for _ in range(3):
+            sched.step()
+        sched.submit(b)
+        sched.run_until_drained()
+        assert a.done and b.done
+        return b, sched.report()
+
+    b, rep = run(limit=200.0)
+    assert rep["admits_deferred"] > 0
+    assert rep["backpressure_steps"] > 0
+    assert b.admit_step - b.arrival_step >= rep["backpressure_steps"]
+    assert rep["admit_pressure_ns"] == 0.0  # drained by the end
+
+    b0, rep0 = run(limit=None)
+    assert rep0["admits_deferred"] == 0
+    assert b0.admit_step == b0.arrival_step
+
+
+# ---------------------------------------------------------------------------
+# Ring backend: sliding-window configs join continuous batching
+# ---------------------------------------------------------------------------
+
+
+def test_ring_backend_matches_model_loop(ring_model):
+    """Per-slot ring serving decodes exactly what the scalar ring decode
+    loop decodes — including a prompt longer than the window (the dead
+    prefix is masked and skipped)."""
+    model, params = ring_model
+    cfg = EngineConfig(max_batch=2, max_ctx=96, backend="ring",
+                       store_layers=2)
+    prompts = [_prompt(40), _prompt(70, 9)]  # 70 > window=32
+    sched, reqs = _serve(model, params, cfg, prompts, max_new=8)
+    for r, p in zip(reqs, prompts):
+        assert r.output == _reference_greedy(model, params, p, 8, 96), r.rid
+
+
+def test_ring_backend_mixed_lengths_batch(ring_model):
+    """Heterogeneous ring slots decode at their own positions in one batch
+    and retire at their own step."""
+    model, params = ring_model
+    cfg = EngineConfig(max_batch=2, max_ctx=96, backend="ring",
+                       store_layers=1)
+    sched = ContinuousScheduler(model, params, cfg)
+    short = Request(rid=0, prompt=_prompt(20), max_new_tokens=4)
+    long = Request(rid=1, prompt=_prompt(50, 3), max_new_tokens=24)
+    sched.submit(short)
+    sched.submit(long)
+    sched.run_until_drained()
+    assert short.done and len(short.output) == 4
+    assert long.done and len(long.output) == 24
+    assert short.finish_step < long.finish_step
+    assert short.output == _reference_greedy(model, params, _prompt(20), 4, 96)
+    assert long.output == _reference_greedy(model, params, _prompt(50, 3), 24, 96)
+
+
+def test_ring_pages_retire_with_the_window(ring_model):
+    """The compressed tier tracks the LIVE window, not the whole context:
+    resident pages stay bounded by the window (+1 boundary page per
+    stream/layer) and dead pages leave without eviction accounting."""
+    model, params = ring_model
+    w = model.cfg.attn_window
+    cfg = EngineConfig(max_batch=1, max_ctx=96, backend="ring",
+                       store_layers=1)
+    sched = ContinuousScheduler(model, params, cfg)
+    r = Request(rid=0, prompt=_prompt(24), max_new_tokens=60)
+    sched.submit(r)
+    max_resident = 0
+    while sched.has_work():
+        sched.step()
+        max_resident = max(max_resident,
+                           sched.backend.store.footprint()["pages"])
+    assert r.done
+    # 1 layer x 2 streams x (window pages + 1 boundary + 1 growing tail)
+    assert max_resident <= 2 * (w // PAGE_TOKENS + 2)
+    assert sched.report()["kv_evictions"] == 0  # dead, never "evicted"
+
+
+def test_ring_backend_serves_mixtral_family():
+    """The ROADMAP item verbatim: a Mixtral-family (MoE + sliding-window)
+    config joins continuous batching through the ring backend, and the
+    paged backend still refuses it."""
+    cfg_m = get_config("mixtral-8x7b", smoke=True)
+    assert 0 < cfg_m.attn_window
+    model = build_model(cfg_m)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="ring"):
+        ContinuousScheduler(model, params,
+                            EngineConfig(max_batch=2, max_ctx=128,
+                                         backend="paged"))
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=128, backend="ring", store_layers=1))
+    reqs = [Request(rid=i, prompt=_prompt(30 + 20 * i, i), max_new_tokens=5)
+            for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+    assert all(r.done and len(r.output) == 5 for r in reqs)
+
+
+def test_ring_slot_reuse_clears_stale_positions(ring_model):
+    """A retired request's ring entries must not leak into the next request
+    admitted into the same slot: stale positions BELOW the newcomer's
+    valid range would pass the position mask and poison its attention
+    (the dense cache is immune — index==position — the ring is not)."""
+    model, params = ring_model
+    cfg = EngineConfig(max_batch=1, max_ctx=96, backend="ring",
+                       store_layers=1)
+    sched = ContinuousScheduler(model, params, cfg)
+    a = Request(rid=0, prompt=_prompt(20), max_new_tokens=4)
+    sched.submit(a)
+    sched.run_until_drained()
+    assert a.done
+    # slot 0 is reused by a LONGER request: its early positions overlap the
+    # retiree's stale entries, which is exactly the poisoned regime
+    b = Request(rid=1, prompt=_prompt(40, 5), max_new_tokens=6)
+    sched.submit(b)
+    sched.run_until_drained()
+    assert b.output == _reference_greedy(model, params, _prompt(40, 5), 6, 96)
+
+
+def test_ring_backend_rejects_full_attention(smoke_model):
+    model, params = smoke_model  # attn_window == 0
+    with pytest.raises(ValueError, match="full attention"):
+        ContinuousScheduler(model, params,
+                            EngineConfig(max_ctx=64, backend="ring"))

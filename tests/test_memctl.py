@@ -318,7 +318,7 @@ def test_fetch_job_planes_resolved_once_at_service_time():
     """A ladder re-assignment landing between submit and service must move
     BOTH the lane-pool bytes and the controller kv_read charge — they can
     never disagree on the plane count (the submit-time-sizing bug)."""
-    from repro.serving.scheduler import make_fetch_job
+    from repro.serving.backends.base import make_fetch_job
 
     store = CompressedKVStore()
     key = PageKey(0, 0, 0, "k")
@@ -338,7 +338,7 @@ def test_fetch_job_planes_resolved_once_at_service_time():
 
 
 def test_fetch_job_of_page_evicted_after_submit_counts_miss():
-    from repro.serving.scheduler import make_fetch_job
+    from repro.serving.backends.base import make_fetch_job
 
     store = CompressedKVStore()
     key = PageKey(0, 0, 0, "k")

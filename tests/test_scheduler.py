@@ -347,8 +347,10 @@ def test_chunked_prefill_is_pad_free(smoke_model):
     round-trips to the device KV — no left-pad garbage, no phantom logical
     bytes for the ragged tail."""
     model, params = smoke_model
+    # paged pinned: the test round-trips full-channel pages against the
+    # device cache, which is a single-tier layout property
     sched = ContinuousScheduler(model, params, EngineConfig(
-        max_batch=2, max_ctx=160, store_layers=2,
+        max_batch=2, max_ctx=160, store_layers=2, backend="paged",
     ))
     n = 37  # 2 full pages + a 5-token ragged tail
     req = Request(rid=0, prompt=_prompt(n), max_new_tokens=8)
@@ -359,12 +361,13 @@ def test_chunked_prefill_is_pad_free(smoke_model):
     assert int(sched._lens[0]) == n + 1
     assert sched.report()["prefill_tokens"] == n
     # exact-length tail page: logical accounting counts 37 tokens, not 48
-    ch = sched._cache["k"].shape[-2] * sched._cache["k"].shape[-1]
+    cache = sched.backend.cache
+    ch = cache["k"].shape[-2] * cache["k"].shape[-1]
     per_tok = 2 * ch * 2  # k+v streams, bf16
     assert sched.store.footprint()["logical_bytes"] == 2 * n * per_tok
     # stored pages hold the real KV (tail pad rows are repeats of the last
     # real token, excluded from accounting and never attended)
-    k_dev, v_dev = sched._slot_kv_host(0, 0, n)
+    k_dev, v_dev = sched.backend.slot_kv_host(0, 0, n)
     for li in range(2):
         back = sched.store.get_sequence(0, li, "k", n)
         np.testing.assert_array_equal(
