@@ -39,6 +39,9 @@ MODULES = [
     ("serving_sharded", "benchmarks.serving_sharded",
      {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
       "smoke": dict(n_requests=5, rate=0.8, max_steps=100)}),
+    ("serving_bitplane", "benchmarks.serving_bitplane",
+     {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
+      "smoke": dict(n_requests=4, rate=0.8, max_steps=80)}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]

@@ -41,6 +41,17 @@ class AccessEvent:
     #: (de)compression-engine cycle the transfer was serviced at, stamped
     #: when a memctl EngineClock is attached; None = unmodeled/infinite engine
     cycle: int | None = None
+    #: decompressed-side bytes at the fetched precision — planes/bits of the
+    #: pad-free logical bytes.  This is what a bit-plane DEVICE cache moves
+    #: on its own bus for the same access (the serving device path asserts
+    #: its kernel-read bytes equal against this); defaults to logical_bytes
+    #: for full-precision and write events
+    device_bytes: int | None = None
+
+    @property
+    def device_side_bytes(self) -> int:
+        return (self.logical_bytes if self.device_bytes is None
+                else self.device_bytes)
 
 
 @dataclasses.dataclass
@@ -54,26 +65,34 @@ class ControllerStats:
 
     events: List[AccessEvent] = dataclasses.field(default_factory=list)
     retain_events: bool = True
-    # kind -> [logical_bytes, physical_bytes, count]
+    # kind -> [logical_bytes, physical_bytes, count, device_bytes]
     totals: Dict[str, list] = dataclasses.field(default_factory=dict)
 
     def log(self, ev: AccessEvent):
-        t = self.totals.setdefault(ev.kind, [0, 0, 0])
+        t = self.totals.setdefault(ev.kind, [0, 0, 0, 0])
         t[0] += ev.logical_bytes
         t[1] += ev.physical_bytes
         t[2] += 1
+        t[3] += ev.device_side_bytes
         if self.retain_events:
             self.events.append(ev)
 
     def kind_bytes(self, kind: str) -> tuple:
         """(logical, physical) running totals for one event kind."""
-        t = self.totals.get(kind, (0, 0, 0))
+        t = self.totals.get(kind, (0, 0, 0, 0))
         return t[0], t[1]
 
     def kind_count(self, kind: str) -> int:
         """Number of logged events of one kind (per-tier charge counting —
         the backend conformance suite checks every kv_write charged once)."""
-        return self.totals.get(kind, (0, 0, 0))[2]
+        return self.totals.get(kind, (0, 0, 0, 0))[2]
+
+    def kind_device_bytes(self, kind: str) -> int:
+        """Decompressed-side (plane-scaled) byte total for one event kind —
+        the bytes a bit-plane device cache moves for the same accesses.
+        The serving device path asserts its kernel-read accounting equal
+        against ``kind_device_bytes('kv_read')``."""
+        return self.totals.get(kind, (0, 0, 0, 0))[3]
 
     @property
     def logical_bytes(self) -> int:
@@ -154,8 +173,12 @@ class MemoryController:
     def _log_kv_read(self, key: tuple, planes: int | None) -> tuple:
         ct = self._kv_pages[key]
         fetched = ct.fetch_bytes(planes)
+        # decompressed-side cost of the same fetch: planes/bits of the
+        # pad-free page (the formula fetch_plan sizes engine jobs with)
+        device = (ct.valid_logical_bytes if planes is None else
+                  max(1, round(ct.valid_logical_bytes * planes / ct.spec.bits)))
         self._log(AccessEvent("kv_read", str(key), ct.valid_logical_bytes,
-                              fetched, planes))
+                              fetched, planes, device_bytes=device))
         return ct, fetched
 
     def read_kv_page(self, key: tuple, planes: int | None = None) -> np.ndarray:

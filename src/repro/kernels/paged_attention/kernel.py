@@ -14,6 +14,7 @@ emits UNNORMALISED partials (o·l, m, l) so rungs merge exactly.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,18 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
+
+
+def default_interpret() -> bool:
+    """Pallas interpret default: interpreter off accelerators, compiled on
+    TPU.  The old hardcoded ``interpret=True`` silently interpreted on TPU
+    runs, throwing away the Mosaic kernel; ``None`` arguments now resolve
+    here.  ``REPRO_PALLAS_INTERPRET=0|1`` overrides (debugging a TPU run in
+    interpret mode, or forcing compilation in a CPU smoke test)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
 
 
 def _unpack_tile(p, keep: int, bits: int):
@@ -87,13 +100,15 @@ def paged_attention_rung(
     keep: int,
     bits: int = 16,
     bs: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """One precision rung over a page range.
 
     q (B, Hkv, rep, hd) bf16; k/v_planes (bits, B, S, Hkv, hd//8) uint8;
     mask (B, S) int8 (1 = valid token).  Returns unnormalised partials
     (o (B, Hkv, rep, hd) f32, m (B, Hkv, rep) f32, l (B, Hkv, rep) f32)."""
+    if interpret is None:
+        interpret = default_interpret()
     b, hkv, rep, hd = q.shape
     s_total = k_planes.shape[2]
     bs = min(bs, s_total)

@@ -4,6 +4,17 @@
 contiguous, page-aligned KV range at ``keep`` planes) and merges the
 unnormalised online-softmax partials — mathematically identical to a single
 softmax over the mixed-precision KV (the ref oracle computes it that way).
+
+``batched_ladder_paged_attention`` is the serving entry point (ISSUE 5):
+one call covers every slot of a continuous-batching decode step.  Each slot
+carries its own valid length and its own per-page plane assignment (the
+ladder re-ranks pages per slot, so the rung geometry differs row by row);
+rungs are expressed as one kernel invocation per *distinct* plane count in
+``keeps`` with a (slot, position) participation mask, so the compile count
+is bounded by the ladder's rung set, never by batch composition.  Every
+rung maps only its ``keep`` top planes in the BlockSpec — planes keep..15
+are structurally unreadable, which is the bandwidth-proportionality
+property the device path inherits from the store (Fig. 5).
 """
 
 from __future__ import annotations
@@ -12,12 +23,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention import kernel as K
+from repro.kernels.paged_attention.kernel import default_interpret  # noqa: F401
 from repro.kernels.paged_attention.ref import pack_kv_ref
 
 
 def pack_kv_planes(kv: jnp.ndarray, bits: int = 16) -> jnp.ndarray:
     """(B, S, Hkv, hd) bf16 -> (bits, B, S, Hkv, hd//8) uint8 (store path)."""
     return pack_kv_ref(kv, bits)
+
+
+def _pick_bs(s_total: int, bs: int) -> int:
+    """Largest tile <= ``bs`` that divides the sequence length (page-aligned
+    caches always admit 16; a padded legacy cache may need the full S)."""
+    cap = min(bs, s_total)
+    for cand in sorted({cap, 128, 64, 32, 16}, reverse=True):
+        if 0 < cand <= cap and s_total % cand == 0:
+            return cand
+    return s_total
 
 
 def ladder_paged_attention(
@@ -28,7 +50,7 @@ def ladder_paged_attention(
     valid_len: int,
     bits: int = 16,
     bs: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """q (B, 1, Hp, hd); ladder ((s0, s1, keep), ...) covering [0, S).
 
@@ -52,7 +74,7 @@ def ladder_paged_attention(
             mask_full[:, s0:s1],
             keep=keep,
             bits=bits,
-            bs=min(bs, s1 - s0),
+            bs=_pick_bs(s1 - s0, bs),
             interpret=interpret,
         )
         if m_all is None:
@@ -65,6 +87,83 @@ def ladder_paged_attention(
             l_all = l_all * c_old + l_r * c_new
             m_all = m_new
     out = o_all / jnp.maximum(l_all, 1e-30)[..., None]
+    return out.reshape(b, 1, hp, hd).astype(q.dtype)
+
+
+def batched_ladder_paged_attention(
+    q: jnp.ndarray,
+    k_planes: jnp.ndarray,
+    v_planes: jnp.ndarray,
+    page_planes: jnp.ndarray,
+    valid_len: jnp.ndarray,
+    keeps: tuple,
+    *,
+    page_tokens: int = 16,
+    bits: int = 16,
+    bs: int = 128,
+    interpret: bool | None = None,
+    q_pos: jnp.ndarray | None = None,
+    kv_pos: jnp.ndarray | None = None,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Multi-slot decode step over a shared bit-plane cache.
+
+    q (B, 1, Hp, hd); k/v_planes (bits, B, S, Hkv, hd//8) uint8;
+    page_planes (B, S/page_tokens) int32 — the plane count the ladder
+    assigned to each slot's device page (entries must come from ``keeps``);
+    valid_len (B,) int32 — per-slot valid cache entries; keeps — the static
+    set of distinct plane counts the ladder can assign (one rung kernel per
+    member, so compiles are bounded by the ladder, not the batch).
+
+    q_pos (B, 1) optional absolute query positions (causality belt for
+    rows whose valid_len overshoots); kv_pos (B, S) optional absolute slot
+    positions for ring caches (-1 = unfilled) with ``window`` masking.
+
+    A fully-masked rung contributes m = -inf, l = 0 partials and drops out
+    of the merge; a row with no valid entries at all returns zeros (idle
+    serving slots — the scheduler discards those rows).
+    """
+    b, one, hp, hd = q.shape
+    assert one == 1
+    hkv = k_planes.shape[3]
+    rep = hp // hkv
+    s_total = k_planes.shape[2]
+    qg = q.reshape(b, hkv, rep, hd)
+    valid_len = jnp.asarray(valid_len)
+    if valid_len.ndim == 0:
+        valid_len = jnp.broadcast_to(valid_len, (b,))
+
+    kpos = (kv_pos if kv_pos is not None
+            else jnp.broadcast_to(jnp.arange(s_total, dtype=jnp.int32),
+                                  (b, s_total)))
+    ok = (kpos >= 0) & (kpos < valid_len[:, None])
+    if q_pos is not None:
+        ok &= kpos <= q_pos[:, :1]
+        if window > 0:
+            ok &= kpos > q_pos[:, :1] - window
+    page_of = jnp.arange(s_total) // page_tokens  # (S,) device page index
+
+    bs = _pick_bs(s_total, bs)
+    m_all, l_all, o_all = None, None, None
+    for keep in keeps:
+        mask = (ok & (page_planes[:, page_of] == keep)).astype(jnp.int8)
+        o_r, m_r, l_r = K.paged_attention_rung(
+            qg, k_planes, v_planes, mask,
+            keep=keep, bits=bits, bs=bs, interpret=interpret,
+        )
+        if m_all is None:
+            m_all, l_all, o_all = m_r, l_r, o_r
+        else:
+            m_new = jnp.maximum(m_all, m_r)
+            c_old = jnp.exp(m_all - m_new)
+            c_new = jnp.exp(m_r - m_new)
+            o_all = o_all * c_old[..., None] + o_r * c_new[..., None]
+            l_all = l_all * c_old + l_r * c_new
+            m_all = m_new
+    out = o_all / jnp.maximum(l_all, 1e-30)[..., None]
+    # a row every rung fully masked: m stayed -inf and the partials are
+    # exp(-inf - -inf) = 1 garbage — zero it (idle slots return zeros)
+    out = jnp.where(m_all[..., None] > K.NEG_INF / 2, out, 0.0)
     return out.reshape(b, 1, hp, hd).astype(q.dtype)
 
 

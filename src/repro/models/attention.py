@@ -18,6 +18,17 @@ Design notes (DESIGN.md §3):
 * **One code path** for train (Sq == Skv, causal), prefill (same), decode
   (Sq == 1 against a long cache with ``kv_valid`` masking), sliding-window
   (Mixtral) and bidirectional (Whisper encoder / cross-attention).
+
+* **Bit-plane device caches (ISSUE 5).**  A serving cache may store KV as
+  packed uint8 bit-planes (``{'k_planes','v_planes'}``, layout
+  (bits, B, S, Hkv, hd//8)) instead of dense bf16.  Decode appends pack the
+  new token's KV (:func:`~repro.kernels.paged_attention.ops.pack_kv_planes`
+  — lossless for bf16) and attention runs the Pallas paged-attention rung
+  kernel per ladder plane count, reading only the planes the per-page
+  ``kv_planes`` map prescribes — the device path of the paper's
+  bandwidth-proportionality claim.  Prefill chunks attend densely at full
+  precision (unpack -> flash -> pack the chunk back), since the ladder only
+  governs decode fetches.
 """
 
 from __future__ import annotations
@@ -28,6 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_attention.ops import (
+    batched_ladder_paged_attention,
+    pack_kv_planes,
+)
+from repro.kernels.paged_attention.ref import unpack_kv_ref
 from repro.models.layers import apply_rope, he_init, rope_angles
 
 NEG_INF = -1e30
@@ -366,6 +382,106 @@ def _decode_attention_body(
     return o.reshape(b, 1, hp, hd).astype(q.dtype)
 
 
+def _ring_chunk_append(q, k, v, hm, ck, cv, cpos, *, pos, cache_len,
+                       append_valid, window, bidirectional):
+    """Ring chunk append (bucketed prefill into a sliding-window slot;
+    chunk size <= w, enforced by the serving bucket cap).  The chunk
+    attends over [old ring entries] ++ [the chunk itself]: ring slots the
+    chunk is about to overwrite are still visible (at their OLD absolute
+    kv_pos) to the chunk's early queries, and a slot's old position p and
+    its new occupant p + w can never both pass the window mask for one
+    query.  Write-back keeps REAL tokens only: a right-padded ragged tail
+    must not clobber older in-window ring entries."""
+    w = ck.shape[1]
+    c = k.shape[1]
+    slots = (jnp.asarray(cache_len, jnp.int32) + jnp.arange(c)) % w
+    valid_end = (jnp.asarray(append_valid, jnp.int32)
+                 if append_valid is not None
+                 else jnp.asarray(cache_len + c, jnp.int32))
+    k_cat = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
+    v_cat = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
+    pos_cat = jnp.concatenate([cpos, pos.astype(cpos.dtype)], axis=1)
+    out = flash_attention(
+        q, k_cat, v_cat, hm, q_pos=pos, kv_valid=valid_end,
+        window=window, bidirectional=bidirectional, kv_pos=pos_cat,
+    )
+    keep = (cache_len + jnp.arange(c)) < valid_end  # (C,)
+    new_k = jnp.where(keep[None, :, None, None],
+                      k.astype(ck.dtype), ck[:, slots])
+    new_v = jnp.where(keep[None, :, None, None],
+                      v.astype(cv.dtype), cv[:, slots])
+    new_p = jnp.where(keep[None, :], pos.astype(cpos.dtype),
+                      cpos[:, slots])
+    ck = ck.at[:, slots].set(new_k)
+    cv = cv.at[:, slots].set(new_v)
+    cpos = cpos.at[:, slots].set(new_p)
+    return out, ck, cv, cpos
+
+
+def _bitplane_cache_step(q, k, v, hm, cache, *, pos, cache_len, window,
+                         bidirectional, append_valid, kv_planes, keeps):
+    """One step against a bit-plane packed device cache.
+
+    cache: (k_planes, v_planes[, kv_pos]) — per-layer slices, planes
+    (bits, B, S, Hkv, hd//8) uint8.  kv_planes: (B, S/16) int32 per-device-
+    page plane counts (the serving backend pushes the ladder assignment
+    here); keeps: static tuple of the distinct plane counts kv_planes may
+    hold.  Decode (S == 1) packs the token and runs the Pallas rung kernel;
+    a prefill chunk (S > 1) attends densely at full precision — unpack,
+    run the matching dense/ring append, pack the updated rows back."""
+    ring = len(cache) == 3
+    kp, vp = cache[0], cache[1]
+    cpos = cache[2] if ring else None
+    bits = kp.shape[0]
+    c = k.shape[1]
+    if c > 1:  # prefill chunk: full-precision dense attend, pack on adoption
+        kd = unpack_kv_ref(kp, bits, bits)
+        vd = unpack_kv_ref(vp, bits, bits)
+        if ring:
+            out, ckd, cvd, cpos = _ring_chunk_append(
+                q, k, v, hm, kd, vd, cpos, pos=pos, cache_len=cache_len,
+                append_valid=append_valid, window=window,
+                bidirectional=bidirectional,
+            )
+            # scattered ring slots were rewritten: repack the whole window
+            return out, (pack_kv_planes(ckd, bits), pack_kv_planes(cvd, bits),
+                         cpos)
+        ckd = jax.lax.dynamic_update_slice(kd, k.astype(kd.dtype),
+                                           (0, cache_len, 0, 0))
+        cvd = jax.lax.dynamic_update_slice(vd, v.astype(vd.dtype),
+                                           (0, cache_len, 0, 0))
+        out = flash_attention(
+            q, ckd, cvd, hm, q_pos=pos, kv_valid=cache_len + c,
+            window=window, bidirectional=bidirectional,
+        )
+        kp = jax.lax.dynamic_update_slice(kp, pack_kv_planes(k, bits),
+                                          (0, 0, cache_len, 0, 0))
+        vp = jax.lax.dynamic_update_slice(vp, pack_kv_planes(v, bits),
+                                          (0, 0, cache_len, 0, 0))
+        return out, (kp, vp)
+    # decode: pack-append the token at each row's own position, then the
+    # partial-plane rung kernel (per-slot valid lengths and ladders)
+    ln = jnp.asarray(cache_len, jnp.int32)
+    if ln.ndim == 0:
+        ln = jnp.broadcast_to(ln, (kp.shape[1],))
+    rows = jnp.arange(kp.shape[1])
+    s_cache = kp.shape[2]
+    slot = (ln % s_cache) if ring else jnp.clip(ln, 0, s_cache - 1)
+    pk = pack_kv_planes(k, bits)[:, :, 0]  # (bits, B, Hkv, hd8)
+    pv = pack_kv_planes(v, bits)[:, :, 0]
+    kp = kp.at[:, rows, slot].set(pk)
+    vp = vp.at[:, rows, slot].set(pv)
+    if ring:
+        cpos = cpos.at[rows, slot].set(ln.astype(cpos.dtype))
+    out = batched_ladder_paged_attention(
+        q, kp, vp, kv_planes, ln + 1,
+        keeps=tuple(keeps) if keeps is not None else (bits,),
+        bits=bits, q_pos=pos, kv_pos=cpos,
+        window=0 if bidirectional else window,
+    )
+    return out.astype(q.dtype), ((kp, vp, cpos) if ring else (kp, vp))
+
+
 def attn_apply(
     params,
     x,
@@ -379,6 +495,8 @@ def attn_apply(
     bidirectional=False,
     window=None,
     append_valid=None,
+    kv_planes=None,
+    keeps=None,
 ):
     """One attention sub-layer.
 
@@ -398,6 +516,9 @@ def attn_apply(
     *overwrite* older in-window entries, so the write-back keeps only
     positions < ``append_valid`` (dense caches don't need this — pad rows
     land past the true length and the next chunk/decode overwrites them).
+    kv_planes/keeps: per-device-page ladder plane map + its static value
+    set, for bit-plane packed caches (uint8 plane tuples — see
+    :func:`_bitplane_cache_step`); ignored for dense caches.
     Returns (y, new_cache) — with cache=None, new_cache is the freshly
     projected (k, v) pair (post-rope), which prefill uses to build the cache.
     """
@@ -421,6 +542,13 @@ def attn_apply(
             window=window, bidirectional=bidirectional,
         )
         new_cache = (k, v)
+    elif cache[0].dtype == jnp.uint8:
+        # bit-plane packed device cache (serving device_kv='bitplane')
+        out, new_cache = _bitplane_cache_step(
+            q, k, v, hm, cache, pos=pos, cache_len=cache_len,
+            window=window, bidirectional=bidirectional,
+            append_valid=append_valid, kv_planes=kv_planes, keeps=keeps,
+        )
     elif len(cache) == 4:
         # Staged decode cache (§Perf Cell-3): the big cache (ck, cv) is
         # READ-ONLY this step — the new token lands in a small staging ring
@@ -452,37 +580,11 @@ def attn_apply(
         ck, cv, cpos = cache
         w = ck.shape[1]
         if x.shape[1] > 1:
-            # Ring chunk append (bucketed prefill into a sliding-window
-            # slot; chunk size <= w, enforced by the serving bucket cap).
-            # The chunk attends over [old ring entries] ++ [the chunk
-            # itself]: ring slots the chunk is about to overwrite are still
-            # visible (at their OLD absolute kv_pos) to the chunk's early
-            # queries, and a slot's old position p and its new occupant
-            # p + w can never both pass the window mask for one query.
-            c = k.shape[1]
-            slots = (jnp.asarray(cache_len, jnp.int32) + jnp.arange(c)) % w
-            valid_end = (jnp.asarray(append_valid, jnp.int32)
-                         if append_valid is not None
-                         else jnp.asarray(cache_len + c, jnp.int32))
-            k_cat = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
-            v_cat = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
-            pos_cat = jnp.concatenate([cpos, pos.astype(cpos.dtype)], axis=1)
-            out = flash_attention(
-                q, k_cat, v_cat, hm, q_pos=pos, kv_valid=valid_end,
-                window=window, bidirectional=bidirectional, kv_pos=pos_cat,
+            out, ck, cv, cpos = _ring_chunk_append(
+                q, k, v, hm, ck, cv, cpos, pos=pos, cache_len=cache_len,
+                append_valid=append_valid, window=window,
+                bidirectional=bidirectional,
             )
-            # write back REAL tokens only: a right-padded ragged tail must
-            # not clobber older in-window ring entries (see docstring)
-            keep = (cache_len + jnp.arange(c)) < valid_end  # (C,)
-            new_k = jnp.where(keep[None, :, None, None],
-                              k.astype(ck.dtype), ck[:, slots])
-            new_v = jnp.where(keep[None, :, None, None],
-                              v.astype(cv.dtype), cv[:, slots])
-            new_p = jnp.where(keep[None, :], pos.astype(cpos.dtype),
-                              cpos[:, slots])
-            ck = ck.at[:, slots].set(new_k)
-            cv = cv.at[:, slots].set(new_v)
-            cpos = cpos.at[:, slots].set(new_p)
         elif getattr(cache_len, "ndim", 0) == 1:
             # Continuous batching on a ring cache: per-row lengths (B,) —
             # each row appends at its own slot ``len % w``; same dummy-row

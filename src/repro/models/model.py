@@ -53,7 +53,9 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key: T.init_lm_params(cfg, key),
             loss=lambda p, b: T.lm_loss(p, cfg, b),
             prefill=lambda p, b: T.lm_prefill(p, cfg, b),
-            decode=lambda p, t, c: T.lm_decode(p, cfg, t, c),
+            # **kw carries the bit-plane serving path's static `keeps`
+            # (plane-count set); dense callers pass nothing
+            decode=lambda p, t, c, **kw: T.lm_decode(p, cfg, t, c, **kw),
             init_cache=lambda batch, max_len, dtype=None: T.init_decode_cache(
                 cfg, batch, max_len, dtype
             ),

@@ -83,11 +83,11 @@ def head_weight(params):
 
 
 def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache,
-               append_valid=None):
+               append_valid=None, kv_planes=None, keeps=None):
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     attn_out, new_kv = attn_apply(
         lp["attn"], h, cfg, pos=pos, cache=cache_kv, cache_len=cache_len,
-        append_valid=append_valid,
+        append_valid=append_valid, kv_planes=kv_planes, keeps=keeps,
     )
     x = x + attn_out
     h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
@@ -102,11 +102,18 @@ def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache,
     return x, new_kv, aux
 
 
-def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
+def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None,
+              keeps=None):
     """x: (B, S, d). cache: {'k','v'} stacked (L, B, Smax, Hkv, hd) + 'len'
     [+ 'pos' (L, B, Smax) for sliding-window ring caches; + 'valid' (scalar,
     not per-layer) = absolute end of real appended tokens for a ring chunk
     append — see ``attn_apply(append_valid=...)``].
+
+    Bit-plane serving caches carry {'k_planes','v_planes'} stacked
+    (L, bits, B, Smax, Hkv, hd//8) uint8 in place of {'k','v'}, plus a
+    'planes' map (B, Smax/16) int32 that is shared across layers (the
+    serving ladder ranks on the last layer and applies everywhere, so it is
+    closed over, not scanned); ``keeps`` is that map's static value set.
 
     Returns (x_final, new_cache_stack_or_None, aux_sum).
     """
@@ -116,6 +123,8 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
         append_valid = cache["valid"]
         cache = {k: v for k, v in cache.items() if k != "valid"}
     cache_len = cache["len"] if cache is not None else jnp.int32(0)
+    bitplane = cache is not None and "k_planes" in cache
+    kv_planes = cache.get("planes") if bitplane else None
     ring = cache is not None and "pos" in cache
     staged = cache is not None and "sk" in cache
 
@@ -129,7 +138,8 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
             kv = None
         x, new_kv, aux = _layer_seq(lp, x, cfg, pos, kv, cache_len,
                                     want_cache or cache is not None,
-                                    append_valid=append_valid)
+                                    append_valid=append_valid,
+                                    kv_planes=kv_planes, keeps=keeps)
         ys = new_kv if (want_cache or cache is not None) else None
         return (x, aux_acc + aux), ys
 
@@ -138,6 +148,10 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
 
     if cache is None:
         xs = params["layers"]
+    elif bitplane:
+        xs = (params["layers"], cache["k_planes"], cache["v_planes"])
+        if ring:
+            xs = xs + (cache["pos"],)
     elif staged:
         xs = (params["layers"], cache["k"], cache["v"], cache["sk"], cache["sv"])
     elif ring:
@@ -147,7 +161,12 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None):
     (x, aux), kv_stack = jax.lax.scan(body, (x, jnp.float32(0)), xs)
     new_cache = None
     if kv_stack is not None:
-        if len(kv_stack) == 4:
+        if bitplane:
+            names = ("k_planes", "v_planes", "pos")
+            new_cache = dict(zip(names, kv_stack))
+            if kv_planes is not None:
+                new_cache["planes"] = kv_planes
+        elif len(kv_stack) == 4:
             ks, vs, sks, svs = kv_stack
             new_cache = {"k": ks, "v": vs, "sk": sks, "sv": svs}
         elif len(kv_stack) == 3:
@@ -277,13 +296,17 @@ def lm_prefill_chunk(params, cfg, tokens, cache, slot, start, last_idx):
     serving scheduler caps bucket sizes at the window for this path.
     """
     ring = "pos" in cache
-    ksl = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
-    vsl = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
+    bitplane = "k_planes" in cache
+    # bit-plane caches stack as (L, bits, B, S, ...): the slot axis moves
+    kn, vn, slot_ax = (("k_planes", "v_planes", 2) if bitplane
+                       else ("k", "v", 1))
+    ksl = jax.lax.dynamic_slice_in_dim(cache[kn], slot, 1, axis=slot_ax)
+    vsl = jax.lax.dynamic_slice_in_dim(cache[vn], slot, 1, axis=slot_ax)
     x = embed_apply(params["embed"], tokens)
     c = x.shape[1]
     start = jnp.asarray(start, jnp.int32)
     pos = start + jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (1, c))
-    sub = {"k": ksl, "v": vsl, "len": start}
+    sub = {kn: ksl, vn: vsl, "len": start}
     if ring:
         sub["pos"] = jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1, axis=1)
         sub["valid"] = start + jnp.asarray(last_idx, jnp.int32) + 1
@@ -293,8 +316,10 @@ def lm_prefill_chunk(params, cfg, tokens, cache, slot, start, last_idx):
     logits = jnp.einsum("bsd,vd->bsv", x_last, head_weight(params))[:, 0]
     out = {
         **cache,
-        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], new_kv["k"], slot, axis=1),
-        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], new_kv["v"], slot, axis=1),
+        kn: jax.lax.dynamic_update_slice_in_dim(
+            cache[kn], new_kv[kn], slot, axis=slot_ax),
+        vn: jax.lax.dynamic_update_slice_in_dim(
+            cache[vn], new_kv[vn], slot, axis=slot_ax),
     }
     if ring:
         out["pos"] = jax.lax.dynamic_update_slice_in_dim(
@@ -303,13 +328,18 @@ def lm_prefill_chunk(params, cfg, tokens, cache, slot, start, last_idx):
     return logits.astype(jnp.float32), out
 
 
-def lm_decode(params, cfg, token, cache):
+def lm_decode(params, cfg, token, cache, keeps=None):
     """token: (B,) int32; cache from prefill or init_decode_cache.
 
     ``cache["len"]`` may be a scalar (aligned batch) or a (B,) vector of
     per-sequence lengths (continuous batching — each slot decodes at its own
     position against its own valid prefix; dense and ring caches both take
     per-row append paths in models/attention).
+
+    Bit-plane caches ({'k_planes','v_planes','planes'}) additionally take
+    ``keeps`` — the static set of plane counts the serving ladder can
+    assign — and run decode attention through the Pallas partial-plane rung
+    kernel instead of the dense einsum path.
 
     Returns (logits (B, Vpad), new cache).
     """
@@ -319,7 +349,8 @@ def lm_decode(params, cfg, token, cache):
         pos = ln[:, None]
     else:
         pos = jnp.broadcast_to(ln, (x.shape[0], 1)).astype(jnp.int32)
-    x, new_cache, _ = run_stack(params, cfg, x, pos, cache=cache, remat=False)
+    x, new_cache, _ = run_stack(params, cfg, x, pos, cache=cache, remat=False,
+                                keeps=keeps)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, head_weight(params))[:, 0]
     new_cache["len"] = cache["len"] + 1
@@ -365,6 +396,34 @@ def flush_staging(cache, cfg):
     )
     return {**cache, "k": k, "v": v,
             "sk": jnp.zeros_like(cache["sk"]), "sv": jnp.zeros_like(cache["sv"])}
+
+
+def bitplane_cache_from_dense(cache, page_tokens: int = 16, bits: int = 16):
+    """Convert a dense serving cache {'k','v'[,'pos'],...} into the
+    bit-plane device layout (ISSUE 5): {'k_planes','v_planes'} stacked
+    (L, bits, B, S, Hkv, hd//8) uint8 plus a per-device-page 'planes' map
+    (B, S/page_tokens) int32, initialised to full precision (the serving
+    ladder re-ranks it per slot).  Packing is a bf16 bitcast — an all-zero
+    dense cache packs to all-zero planes, and a populated one round-trips
+    bit-exactly at keep == bits."""
+    from repro.kernels.paged_attention.ops import pack_kv_planes
+
+    l, b, s, hkv, hd = cache["k"].shape
+    if hd % 8 != 0:
+        raise ValueError(
+            f"bit-plane packing needs head_dim % 8 == 0, got {hd}"
+        )
+    out = {k: v for k, v in cache.items() if k not in ("k", "v")}
+
+    def pack(kv):  # (L, B, S, Hkv, hd) -> (L, bits, B, S, Hkv, hd//8)
+        p = pack_kv_planes(kv.reshape(l * b, s, hkv, hd), bits)
+        return jnp.moveaxis(p.reshape(bits, l, b, s, hkv, hd // 8), 0, 1)
+
+    out["k_planes"] = pack(cache["k"])
+    out["v_planes"] = pack(cache["v"])
+    n_pages = -(-s // page_tokens)
+    out["planes"] = jnp.full((b, n_pages), bits, jnp.int32)
+    return out
 
 
 def ring_cache_from_prefill(cache, cfg, max_len):

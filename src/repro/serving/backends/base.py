@@ -75,6 +75,7 @@ from repro.serving.kv_cache import (
 BACKEND_STATS = (
     "kv_fetch_misses", "kv_fetch_deferrals", "kv_reactivations",
     "engine_jobs_cancelled", "kv_peak_stored_bytes", "kv_peak_logical_bytes",
+    "device_bytes_read",
 )
 
 
@@ -94,6 +95,9 @@ class SlotState:
     #: first page not yet fully slid out of the attention window (ring
     #: tiers; always 0 for full-attention backends)
     live_from_page: int = 0
+    #: last plane-map row pushed to the device cache (bit-plane layouts) —
+    #: lets per-token re-syncs skip the device write when nothing changed
+    device_row: Optional[np.ndarray] = None
 
 
 class MemTier:
@@ -139,7 +143,7 @@ class MemTier:
 
 
 def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
-                   key: PageKey, seq_key) -> Job:
+                   key: PageKey, seq_key, device_kv: str = "dense") -> Job:
     """Decode-critical fetch with SERVICE-TIME sizing.
 
     The plane count is resolved exactly once — by ``size_fn`` when the
@@ -147,6 +151,12 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
     controller's kv_read at that same resolved count, so the lane-pool
     bytes and the accounting can never disagree across a ladder
     re-assignment (or an eviction) that lands between submit and service.
+
+    The job also accumulates ``device_bytes_read`` — the bytes the DEVICE
+    cache moves for this page's decode read.  A bit-plane device cache
+    reads exactly the planes the ladder prescribes (the engine-job bytes);
+    a dense cache reads the full-precision page no matter what the ladder
+    charged — the accounting-vs-device gap the bit-plane layout closes.
     """
     plan: dict = {}
 
@@ -156,6 +166,8 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
             return 0  # evicted since submit; fn counts the scheduler miss
         nbytes, keep = store.fetch_plan(key)
         plan["keep"] = keep
+        plan["device"] = (nbytes if device_kv == "bitplane"
+                          else store.page_logical_bytes(key))
         return nbytes
 
     def fn() -> None:
@@ -166,6 +178,12 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
             store.account_fetch(key, keep_planes=plan["keep"])
         except PageEvictedError:
             stats["kv_fetch_misses"] += 1
+            return
+        # direct callers (tests) may pass a bare stats dict; backends
+        # pre-seed every BACKEND_STATS key
+        stats["device_bytes_read"] = (
+            stats.get("device_bytes_read", 0) + plan["device"]
+        )
 
     return Job(JobClass.DECODE_FETCH, 0, fn=fn, key=key.astuple(),
                seq_id=seq_key, size_fn=size)
@@ -184,6 +202,7 @@ class KVBackend(abc.ABC):
         self.model = model
         self.mcfg = model.cfg
         self.cfg = cfg
+        self.device_kv = cfg.device_kv
         self.check_model(model.cfg, cfg)
         self.stats = stats if stats is not None else {}
         for key in BACKEND_STATS:
@@ -209,6 +228,20 @@ class KVBackend(abc.ABC):
         if mcfg.decode_staging > 0:
             raise NotImplementedError(
                 "decode staging rings conflict with per-slot lengths"
+            )
+        cls.check_device_kv(mcfg, cfg)
+
+    @classmethod
+    def check_device_kv(cls, mcfg, cfg) -> None:
+        if cfg.device_kv not in ("dense", "bitplane"):
+            raise ValueError(
+                f"device_kv must be 'dense' or 'bitplane', got "
+                f"{cfg.device_kv!r}"
+            )
+        if cfg.device_kv == "bitplane" and mcfg.head_dim % 8 != 0:
+            raise ValueError(
+                f"bit-plane packing needs head_dim % 8 == 0, got "
+                f"{mcfg.head_dim}"
             )
 
     # ----------------------------------------------------------------- tiers
@@ -244,16 +277,51 @@ class KVBackend(abc.ABC):
     def _build_cache(self):
         cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
         assert "k" in cache and "v" in cache and "sk" not in cache and "pos" not in cache
+        cache = self._apply_device_layout(cache)
         cache["len"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
         return cache
+
+    def _apply_device_layout(self, cache):
+        """Convert the model's dense cache to the configured device layout
+        (``device_kv='bitplane'``: packed uint8 planes + a per-page plane
+        map the ladder assignment is pushed into)."""
+        if self.device_kv != "bitplane":
+            return cache
+        from repro.models.transformer import bitplane_cache_from_dense
+
+        return bitplane_cache_from_dense(cache, page_tokens=PAGE_TOKENS)
+
+    def device_keeps(self) -> Optional[tuple]:
+        """Static plane-count set the device decode kernel may be asked to
+        read (one Pallas rung per member) — the ladder's rung planes plus
+        full precision (unassigned pages: growing tails, pre-ladder pages).
+        ``None`` on the dense layout (no kernel, no static set)."""
+        if self.device_kv != "bitplane":
+            return None
+        bits = self.tiers[0].store.spec.bits
+        keeps = {bits}
+        if self.cfg.ladder is not None:
+            keeps |= {planes for _, planes in self.cfg.ladder.rungs}
+        return tuple(sorted(keeps))
 
     def sync_lens(self, lens) -> None:
         self._cache["len"] = jnp.asarray(lens)
 
     def adopt_prefill(self, slot_id: int, pcache, s: int) -> None:
         """Legacy padded admission: copy a single-sequence prefill cache
-        into this slot's rows [0, s)."""
+        into this slot's rows [0, s) (bit-plane layouts pack on adoption)."""
         cache = self.ensure_cache()
+        if self.device_kv == "bitplane":
+            from repro.kernels.paged_attention.ops import pack_kv_planes
+
+            # (L, 1, s, Hkv, hd) -> (bits, L, s, Hkv, hd8) -> (L, bits, ...)
+            for name in ("k", "v"):
+                packed = jnp.moveaxis(
+                    pack_kv_planes(pcache[name][:, 0, :s]), 0, 1
+                )
+                dst = name + "_planes"
+                cache[dst] = cache[dst].at[:, :, slot_id, :s].set(packed)
+            return
         cache["k"] = cache["k"].at[:, slot_id, :s].set(pcache["k"][:, 0])
         cache["v"] = cache["v"].at[:, slot_id, :s].set(pcache["v"][:, 0])
 
@@ -273,20 +341,43 @@ class KVBackend(abc.ABC):
 
     def slot_kv_host(self, slot_id: int, t0: int, t1: int):
         """Device->host copy of this slot's KV rows [t0, t1) for the stored
-        layers, flattened to (L_stored, tokens, channels) bf16."""
+        layers, flattened to (L_stored, tokens, channels) bf16.  The
+        bit-plane layout unpacks at full precision first — packing is a
+        bf16 bitcast, so the copy is bit-identical to the dense layout's."""
         import ml_dtypes
 
         ls = self.stored_layers()
         rows = self._device_rows(t0, t1)
+        t = t1 - t0
+        if self.device_kv == "bitplane":
+            from repro.kernels.paged_attention.ref import unpack_kv_ref
+
+            out = []
+            for name in ("k_planes", "v_planes"):
+                # (ls, bits, t, Hkv, hd8) -> unpack layers as the batch axis
+                pl = jnp.moveaxis(
+                    self._cache[name][:ls, :, slot_id, rows], 1, 0
+                )
+                bits = pl.shape[0]
+                dense = unpack_kv_ref(pl, bits, bits)  # (ls, t, Hkv, hd)
+                out.append(np.asarray(dense.reshape(ls, t, -1)))
+            return tuple(out)
         k = np.asarray(self._cache["k"][:ls, slot_id, rows], np.float32)
         v = np.asarray(self._cache["v"][:ls, slot_id, rows], np.float32)
-        t = t1 - t0
         return (k.reshape(ls, t, -1).astype(ml_dtypes.bfloat16),
                 v.reshape(ls, t, -1).astype(ml_dtypes.bfloat16))
 
     # --------------------------------------------------------- slot lifecycle
     def bind_slot(self, slot_id: int, rid: int) -> None:
         self._slots[slot_id] = SlotState(rid=rid)
+        self._reset_device_planes(slot_id)
+
+    def _reset_device_planes(self, slot_id: int) -> None:
+        """Bit-plane layout: a reused slot must not inherit the previous
+        occupant's ladder — reset its device plane map to full precision."""
+        if self.device_kv == "bitplane" and self._cache is not None:
+            bits = self.tiers[0].store.spec.bits
+            self._cache["planes"] = self._cache["planes"].at[slot_id].set(bits)
 
     def retire(self, slot_id: int, rid: int) -> int:
         """Cancel the request's queued engine jobs (shard-scoped — a cancel
@@ -300,6 +391,7 @@ class KVBackend(abc.ABC):
             tier.store.drop_sequence(rid)
         self.stats["engine_jobs_cancelled"] += cancelled
         self._slots.pop(slot_id, None)
+        self._reset_device_planes(slot_id)
         return cancelled
 
     # ---------------------------------------------------------- page traffic
@@ -417,6 +509,7 @@ class KVBackend(abc.ABC):
                             tier.engine.submit(make_fetch_job(
                                 tier.store, self.stats, key,
                                 self._seq_key(tier, rid),
+                                device_kv=self.device_kv,
                             ))
                         elif (tier.engine.pending(kt, JobClass.KV_WRITE)
                               or tier.engine.pending(kt, JobClass.BACKGROUND)):
@@ -460,11 +553,62 @@ class KVBackend(abc.ABC):
                                    fn=fn, key=key.astuple(),
                                    seq_id=self._seq_key(tier, st.rid)))
 
+    def _device_k_rows(self, slot_id: int, t0: int, t1: int):
+        """Last-layer device keys for absolute tokens [t0, t1) — the quest
+        ranking input, identical between layouts (bit-plane unpack at full
+        precision is a bf16 bitcast)."""
+        rows = self._device_rows(t0, t1)
+        if self.device_kv != "bitplane":
+            return self._cache["k"][-1, slot_id, rows]
+        from repro.kernels.paged_attention.ref import unpack_kv_ref
+
+        pl = self._cache["k_planes"][-1][:, slot_id][:, rows]
+        bits = pl.shape[0]
+        return unpack_kv_ref(pl[:, None], bits, bits)[0]
+
+    def _device_page(self, page_idx: int) -> int:
+        """Device plane-map column holding this absolute page (ring layouts
+        fold modulo the window's page count)."""
+        return page_idx
+
+    def _push_device_planes(self, slot_id: int, st: SlotState) -> None:
+        """Publish the slot's ladder assignment into the device plane map,
+        so the NEXT decode step's kernel reads exactly the planes the
+        controller will charge.  Pages without an assignment (growing tail,
+        dead ring prefix already pruned from ``page_planes``) stay at full
+        precision."""
+        if self.device_kv != "bitplane":
+            return
+        bits = self.tiers[0].store.spec.bits
+        row = np.full(self._cache["planes"].shape[1], bits, np.int32)
+        for p, keep in st.page_planes.items():
+            if p >= st.live_from_page:
+                row[self._device_page(p)] = keep
+        self._set_device_row(slot_id, st, row)
+
+    def _set_device_row(self, slot_id: int, st: SlotState,
+                        row: np.ndarray) -> None:
+        """Write a slot's plane-map row to the device cache, skipping the
+        transfer when it matches the last pushed row (steady-state decode
+        re-syncs change nothing between page fills)."""
+        if st.device_row is not None and np.array_equal(st.device_row, row):
+            return
+        st.device_row = row
+        self._cache["planes"] = self._cache["planes"].at[slot_id].set(
+            jnp.asarray(row)
+        )
+
     def _assign_ladder_planes(self, slot_id: int, ln: int) -> None:
         """Re-rank this slot's live full pages against the newest query
         proxy and record the ladder's plane count on every stored page (all
         layers share the last layer's ranking, as the seed engine did).  A
-        ragged stored tail page keeps full precision until it fills."""
+        ragged stored tail page keeps full precision until it fills.
+
+        The per-page count is SNAPPED to the ladder's rung planes (nearest;
+        ties keep the higher precision): a page is always at one of the
+        ladder's named precisions, which is both the paper's Table II
+        semantics and what bounds the device kernel's compile count to the
+        rung set (``device_keeps``)."""
         ladder = self.cfg.ladder
         if ladder is None:
             return
@@ -473,24 +617,25 @@ class KVBackend(abc.ABC):
         p0 = st.live_from_page
         if n_pages <= p0:
             return
-        k_last = self._cache["k"][-1, slot_id,
-                                  self._device_rows(p0 * PAGE_TOKENS,
-                                                    n_pages * PAGE_TOKENS)]
+        k_last = self._device_k_rows(slot_id, p0 * PAGE_TOKENS,
+                                     n_pages * PAGE_TOKENS)
         kmin, kmax = page_minmax(k_last, PAGE_TOKENS)
-        q_proxy = self._cache["k"][-1, slot_id,
-                                   self._device_rows(ln - 1, ln)][0]
+        q_proxy = self._device_k_rows(slot_id, ln - 1, ln)[0]
         planes = assign_page_precision(quest_scores(q_proxy, kmin, kmax), ladder)
         mean_planes = np.asarray(jnp.mean(planes.astype(jnp.float32), axis=1))
         spec_bits = self.tiers[0].store.spec.bits
+        rung_planes = sorted({min(spec_bits, max(1, p))
+                              for _, p in ladder.rungs})
         for i, p in enumerate(range(p0, n_pages)):
-            keep = int(round(float(mean_planes[i])))
-            keep = max(1, min(spec_bits, keep))
+            m = float(mean_planes[i])
+            keep = min(rung_planes, key=lambda r: (abs(r - m), -r))
             st.page_planes[p] = keep
             for li in range(self.stored_layers()):
                 for stream in ("k", "v"):
                     key = PageKey(st.rid, li, p, stream)
                     for tier, _cols in self._page_targets(key):
                         tier.store.set_planes(key, keep)
+        self._push_device_planes(slot_id, st)
 
     # ---------------------------------------------------------------- engine
     def tick(self) -> None:
@@ -527,7 +672,7 @@ class KVBackend(abc.ABC):
         counters, and the engine-limited numbers — aggregated across tiers
         (a single tier passes its engine report through unchanged)."""
         s: dict = {}
-        w_log = w_phys = r_log = r_phys = 0
+        w_log = w_phys = r_log = r_phys = r_dev = 0
         evictions = evicted_bytes = resident = 0
         for tier in self.tiers:
             wl, wp = tier.controller.stats.kind_bytes("kv_write")
@@ -536,6 +681,7 @@ class KVBackend(abc.ABC):
             w_phys += wp
             r_log += rl
             r_phys += rp
+            r_dev += tier.controller.stats.kind_device_bytes("kv_read")
             fp = tier.store.footprint()
             evictions += fp["evictions"]
             evicted_bytes += fp["evicted_bytes"]
@@ -548,6 +694,18 @@ class KVBackend(abc.ABC):
             s["kv_capacity_saving"] = 1 - w_phys / w_log
         if r_log:
             s["kv_bandwidth_saving"] = 1 - r_phys / r_log
+        # device half of the bandwidth claim: what the DEVICE cache read for
+        # the same serviced decode fetches.  Bit-plane layout: equals the
+        # controller's plane-scaled kv_read (kv_read_device_bytes) — the
+        # ladder's bytes are wall-clock bytes.  Dense layout: equals the
+        # full-precision logical bytes, exposing the accounting-vs-device
+        # gap the bit-plane layout closes.
+        s["device_kv"] = self.device_kv
+        s["device_bytes_read"] = self.stats["device_bytes_read"]
+        s["kv_read_device_bytes"] = r_dev
+        if r_log:
+            s["kv_device_bandwidth_saving"] = \
+                1 - self.stats["device_bytes_read"] / r_log
         s["kv_evictions"] = evictions
         s["kv_evicted_bytes"] = evicted_bytes
         s["kv_resident_stored_bytes"] = resident

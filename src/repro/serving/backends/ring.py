@@ -67,6 +67,13 @@ class RingBackend(KVBackend):
                 "backend='ring' requires prefill_mode='bucketed' (a padded "
                 "full-length prefill cache cannot adopt into a window ring)"
             )
+        if cfg.device_kv == "bitplane" and mcfg.attn_window % PAGE_TOKENS:
+            raise ValueError(
+                f"bit-plane ring caches need attn_window to be a multiple "
+                f"of PAGE_TOKENS ({PAGE_TOKENS}) so device pages fold "
+                f"cleanly, got {mcfg.attn_window}"
+            )
+        cls.check_device_kv(mcfg, cfg)
 
     @property
     def window(self) -> int:
@@ -76,6 +83,7 @@ class RingBackend(KVBackend):
     def _build_cache(self):
         cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
         assert "pos" in cache, "ring backend expects a ring decode cache"
+        cache = self._apply_device_layout(cache)
         cache["len"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
         return cache
 
@@ -117,8 +125,47 @@ class RingBackend(KVBackend):
                     key = PageKey(st.rid, li, p, stream)
                     for tier, _cols in self._page_targets(key):
                         tier.store.drop_page(key)
+            # its device rows now belong to a newer page: drop the ladder
+            # entry so the plane map never applies a dead page's precision
+            st.page_planes.pop(p, None)
         st.live_from_page = max(st.live_from_page, dead_end)
 
     def _can_reactivate(self, st: SlotState, page_idx: int, ln: int) -> bool:
         # every device row of the page must still be inside the window
         return page_idx * PAGE_TOKENS >= max(0, ln - self.window)
+
+    # ------------------------------------------------------ device plane map
+    def _device_page(self, page_idx: int) -> int:
+        return page_idx % (self.window // PAGE_TOKENS)
+
+    def _push_device_planes(self, slot_id: int, st: SlotState) -> None:
+        self._sync_ring_planes(slot_id, st, st.stored_tokens)
+
+    def _account_step_fetch(self, slot_id: int, ln: int) -> None:
+        # re-sync every decode token: the growing ring head reclaims a dying
+        # page's device rows token by token, and those rows must fall back
+        # to full precision the moment they stop being that page's
+        if self.device_kv == "bitplane":
+            self._sync_ring_planes(slot_id, self._slots[slot_id], ln)
+        super()._account_step_fetch(slot_id, ln)
+
+    def _sync_ring_planes(self, slot_id: int, st: SlotState, ln: int) -> None:
+        """Ring plane map: only pages whose device rows are still fully
+        their own keep their rung; a boundary page sharing rows with the
+        ring head — and the head itself — read at full precision (the
+        newest tokens are never truncated by a stale assignment)."""
+        if self.device_kv != "bitplane" or self._cache is None:
+            return
+        bits = self.tiers[0].store.spec.bits
+        wp = self.window // PAGE_TOKENS
+        row = np.full(wp, bits, np.int32)
+        # the NEXT append lands at slot ln % w: any page whose device rows
+        # that slot (or an earlier reclaimed one) belongs to must already
+        # read full precision — strictly-greater cutoff, so an exactly
+        # page-aligned ln retires page (ln-w)/16 one step EARLY, never late
+        first_intact = ((ln - self.window) // PAGE_TOKENS + 1
+                        if ln >= self.window else 0)
+        for p, keep in st.page_planes.items():
+            if p >= first_intact:
+                row[p % wp] = keep
+        self._set_device_row(slot_id, st, row)

@@ -161,6 +161,12 @@ class CompressedKVStore:
         store's hit/miss counters agree with the scheduler's."""
         self.counters["misses"] += 1
 
+    def page_logical_bytes(self, key: PageKey) -> int:
+        """Pad-free logical bytes of a resident page — what a DENSE device
+        cache reads for it regardless of the ladder (the bandwidth fiction
+        the bit-plane device path closes)."""
+        return self.controller.kv_page(key.astuple()).valid_logical_bytes
+
     def fetch_plan(self, key: PageKey) -> Tuple[int, int]:
         """(engine bytes, plane count) for a fetch resolved *now*.
 

@@ -150,6 +150,18 @@ class EngineConfig:
     #: shard count for backend='sharded' (shards=1 is bit-exact with
     #: 'paged'; the conformance suite asserts it)
     shards: int = 2
+    #: device KV-cache layout (ISSUE 5): 'dense' — bf16 rows, decode reads
+    #: full precision regardless of the ladder (bandwidth savings are
+    #: accounting-only); 'bitplane' — packed uint8 bit-planes, decode runs
+    #: the Pallas partial-plane rung kernel and reads exactly the planes
+    #: the ladder prescribes (``report()["device_bytes_read"]`` equals the
+    #: controller's plane-scaled kv_read).  The default honours the
+    #: REPRO_SERVING_DEVICE_KV env var (CI leg), mirroring
+    #: REPRO_SERVING_BACKEND.
+    device_kv: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_SERVING_DEVICE_KV",
+                                               "dense")
+    )
     #: admission backpressure threshold: defer new admits while the
     #: engine's modeled service latency lags the wall clock by more than
     #: this many ns (None = admit regardless, the pre-backpressure
@@ -209,18 +221,23 @@ def chunk_schedule(prompt_len: int, buckets: List[int]) -> List[tuple]:
 #: jitted prefill/decode/chunk shared across schedulers of the same model
 #: instance, so compile time is paid once (benchmarks compare modes on
 #: equal footing when they reuse one model object — and build fresh model
-#: objects when they want cold-compile numbers)
+#: objects when they want cold-compile numbers).  Keyed per (model, keeps):
+#: the bit-plane device path bakes the ladder's static plane-count set into
+#: the decode closure (one Pallas rung per member).
 _JIT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
-def _jitted(model: Model):
+def _jitted(model: Model, keeps: tuple | None = None):
+    per = _JIT_CACHE.setdefault(model, {})
     try:
-        return _JIT_CACHE[model]
+        return per[keeps]
     except KeyError:
         chunk = (jax.jit(model.prefill_chunk)
                  if model.prefill_chunk is not None else None)
-        fns = (jax.jit(model.prefill), jax.jit(model.decode), chunk)
-        _JIT_CACHE[model] = fns
+        decode = (jax.jit(model.decode) if keeps is None else
+                  jax.jit(lambda p, t, c: model.decode(p, t, c, keeps=keeps)))
+        fns = (jax.jit(model.prefill), decode, chunk)
+        per[keeps] = fns
         return fns
 
 
@@ -269,7 +286,9 @@ class ContinuousScheduler:
         # behind the protocol; the backend mutates the shared stats dict
         self.backend = make_backend(model, cfg, controller=controller,
                                     stats=self.stats)
-        self._prefill, self._decode, self._prefill_chunk = _jitted(model)
+        self._prefill, self._decode, self._prefill_chunk = _jitted(
+            model, self.backend.device_keeps()
+        )
         # chunked admission needs the chunk kernel; families without one
         # (none today among dense/moe) fall back to the padded path
         self._mode = (cfg.prefill_mode if self._prefill_chunk is not None
@@ -338,25 +357,48 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """Admit -> prefill chunks -> one batched decode step -> engine tick
-        -> retire.  Returns the requests retired this step.
+        """Admit -> dispatch prefill chunks -> dispatch one batched decode
+        step -> flush prefill storage -> commit decode -> engine tick ->
+        retire.  Returns the requests retired this step.
+
+        True async admission (ISSUE 5 satellite): prefill chunks are
+        DISPATCHED without a host sync — the old per-chunk
+        ``block_until_ready`` serialized every chunk ahead of the decode
+        dispatch — and the backend's host-side page streaming
+        (``on_prefill_progress``: device->host copy + engine job
+        submission) runs AFTER the decode step is dispatched, overlapping
+        with its device execution.  The overlap is safe because a chunk's
+        rows [0, end) are append-only: the concurrent decode writes only at
+        each row's own ``len`` position (== the mid-prefill row's next
+        chunk start).  Chunk pacing is unchanged — a joining prompt still
+        advances exactly ``prefill_chunks_per_step`` chunks per step while
+        others decode.
 
         The engine tick is where every (de)compression submitted this step
         — prefill/decode page writes, decode fetches, re-activations — is
         serviced against each tier's per-step lane budget; leftovers stay
         queued for later windows."""
         self._admit_tick()
-        self._prefill_tick()
+        progressed = self._prefill_tick()
         if self.decoding == 0:
+            self._flush_prefill_progress(progressed)
             self.backend.tick()   # engine windows track wall steps
             self.step_count += 1  # idle tick: arrival traces keyed on
             return []             # step_count must still advance time
-        self._decode_step()
+        pending_decode = self._decode_dispatch()
+        self._flush_prefill_progress(progressed)
+        self._decode_commit(pending_decode)
         self.backend.tick()
         if self.cfg.store_kv_compressed:
             self.backend.note_peaks()
         self.step_count += 1
         return self._retire_finished()
+
+    def _flush_prefill_progress(self, progressed) -> None:
+        """Hand this step's completed prompt spans to the backend (page
+        writes + ladder assignment), in dispatch order."""
+        for slot_id, end, final in progressed:
+            self.backend.on_prefill_progress(slot_id, end, final)
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
         done: List[Request] = []
@@ -408,13 +450,19 @@ class ContinuousScheduler:
         if self._mode == "padded":
             self._prefill_padded(slot_id)
 
-    def _prefill_tick(self) -> None:
+    def _prefill_tick(self) -> List[tuple]:
         """Advance every mid-prefill slot (bucketed mode; the padded path
         completes inside ``_admit``).  Overlap policy — the double-buffered
         slot join: while other slots decode, a joining prompt advances only
         ``prefill_chunks_per_step`` chunks per step so admission never
         stalls the batch; with nothing decoding, the prompt runs to
-        completion now (nobody is waiting on the step)."""
+        completion now (nobody is waiting on the step).
+
+        Returns the (slot_id, end, final) progress events of the chunks it
+        dispatched; the caller flushes them to the backend AFTER the decode
+        dispatch, so the backend's host-side copies don't sit on the decode
+        critical path."""
+        progressed: List[tuple] = []
         decode_live = self.decoding > 0
         for slot_id, slot in enumerate(self._slots):
             if slot is None or not slot.prefilling:
@@ -422,15 +470,17 @@ class ContinuousScheduler:
             budget = (max(1, self.cfg.prefill_chunks_per_step)
                       if decode_live else len(slot.prompt))
             while slot.prefilling and budget > 0:
-                self._prefill_chunk_once(slot_id)
+                self._prefill_chunk_once(slot_id, progressed)
                 budget -= 1
+        return progressed
 
-    def _prefill_chunk_once(self, slot_id: int) -> None:
-        """Run ONE bucketed chunk of this slot's prompt through the chunked
-        prefill kernel, append it into the slot's cache rows, and hand the
-        completed span to the backend for storage.  On the final chunk,
-        sample the first output token from the last REAL position's
-        logits."""
+    def _prefill_chunk_once(self, slot_id: int, progressed: List[tuple]) -> None:
+        """Dispatch ONE bucketed chunk of this slot's prompt through the
+        chunked prefill kernel, appending it into the slot's cache rows.
+        No host sync: the chunk's completion is recorded on ``progressed``
+        for a post-decode-dispatch flush.  Only the final chunk
+        materializes its logits — the first output token must exist before
+        the slot joins this step's batched decode."""
         slot = self._slots[slot_id]
         start = slot.prefill_pos
         bucket, real = next_chunk(len(slot.prompt) - start, self._buckets)
@@ -445,7 +495,8 @@ class ContinuousScheduler:
             jnp.int32(slot_id), jnp.int32(start), jnp.int32(real - 1),
         )
         self.backend.cache = cache
-        logits = jax.block_until_ready(logits)
+        # dispatch-only timing: execution overlaps the decode step and is
+        # absorbed by whichever result is materialized first
         self.stats["prefill_s"] += time.time() - t0
         self.stats["prefill_tokens"] += real
         self.stats["prefill_chunks"] += 1
@@ -455,7 +506,7 @@ class ContinuousScheduler:
         slot.prefill_pos = start + real
         self._lens[slot_id] = slot.prefill_pos
         final = slot.prefill_pos >= len(slot.prompt)
-        self.backend.on_prefill_progress(slot_id, slot.prefill_pos, final)
+        progressed.append((slot_id, slot.prefill_pos, final))
         if final:
             slot.prefilling = False
             slot.pending = self._first_token(slot, logits)
@@ -497,7 +548,10 @@ class ContinuousScheduler:
         return int(np.asarray(tok)[0])
 
     # ----------------------------------------------------------------- decode
-    def _decode_step(self) -> None:
+    def _decode_dispatch(self):
+        """Dispatch one batched decode step + sampling; returns the pending
+        device result WITHOUT materializing it, so host-side work (the
+        prefill storage flush) overlaps the device execution."""
         b = self.cfg.max_batch
         tok = np.zeros(b, np.int32)
         draws = np.zeros(b, np.int64)
@@ -519,11 +573,17 @@ class ContinuousScheduler:
             self.params, jnp.asarray(tok), self.backend.cache
         )
         self.backend.cache = cache
-        nxt = np.asarray(sample_slots(jnp.stack(keys), draws, logits,
-                                      self.cfg.sampler))
-        jax.block_until_ready(nxt)
+        nxt = sample_slots(jnp.stack(keys), draws, logits, self.cfg.sampler)
+        return nxt, t0
+
+    def _decode_commit(self, pending) -> None:
+        """Materialize the dispatched decode step and run its bookkeeping
+        (outputs, lengths, per-slot page traffic)."""
+        nxt_dev, t0 = pending
+        nxt = np.asarray(jax.block_until_ready(nxt_dev))
         self.stats["decode_s"] += time.time() - t0
 
+        b = self.cfg.max_batch
         n_dec = self.decoding
         self.stats["decode_steps"] += 1
         self.stats["decode_batch_occupancy"] += n_dec / b

@@ -173,6 +173,62 @@ class TestPagedAttention:
         full = 2 * B * S * Hkv * hd * 2
         assert kv_fetch_bytes(kp, ladder) <= full
 
+    def test_batched_multi_slot_matches_per_slot_ref(self, rng):
+        """ISSUE 5 tentpole kernel surface: one batched call with per-slot
+        valid lengths AND per-slot page-plane maps equals composing the ref
+        oracle slot by slot over each slot's own contiguous rungs."""
+        from repro.kernels.paged_attention.ops import (
+            batched_ladder_paged_attention,
+            pack_kv_planes,
+        )
+        from repro.kernels.paged_attention.ref import ladder_attention_ref
+
+        B, S, Hkv, rep, hd = 3, 96, 2, 2, 16
+        q = _bf16(rng, B, 1, Hkv * rep, hd)
+        k = _bf16(rng, B, S, Hkv, hd)
+        v = _bf16(rng, B, S, Hkv, hd)
+        kp, vp = pack_kv_planes(k), pack_kv_planes(v)
+        pp = np.full((B, S // 16), 16, np.int32)
+        pp[1] = [16, 8, 8, 4, 4, 4]
+        pp[2] = [4, 16, 4, 8, 16, 8]  # scattered — no contiguous-rung luxury
+        valid = np.array([96, 77, 50], np.int32)
+        got = batched_ladder_paged_attention(
+            q, kp, vp, jnp.asarray(pp), jnp.asarray(valid), keeps=(4, 8, 16)
+        )
+        for b in range(B):
+            runs = []
+            for p in range(S // 16):
+                if runs and runs[-1][2] == pp[b, p]:
+                    runs[-1] = (runs[-1][0], (p + 1) * 16, runs[-1][2])
+                else:
+                    runs.append((p * 16, (p + 1) * 16, int(pp[b, p])))
+            want = ladder_attention_ref(
+                q[b:b + 1], kp[:, b:b + 1], vp[:, b:b + 1], runs,
+                int(valid[b]),
+            )
+            np.testing.assert_allclose(
+                np.asarray(got[b:b + 1], np.float32),
+                np.asarray(want, np.float32), atol=0.08,
+            )
+        # a slot with nothing valid returns zeros, not softmax garbage
+        idle = batched_ladder_paged_attention(
+            q, kp, vp, jnp.asarray(pp), jnp.zeros(B, jnp.int32), keeps=(16,)
+        )
+        assert np.all(np.asarray(idle, np.float32) == 0)
+
+    def test_interpret_default_follows_backend(self, monkeypatch):
+        """ISSUE 5 satellite: interpret=None resolves from the JAX backend
+        (interpreter on CPU, compiled elsewhere) with an env override — the
+        old hardcoded True silently interpreted on TPU."""
+        from repro.kernels.paged_attention.kernel import default_interpret
+
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+        assert default_interpret() == (jax.default_backend() == "cpu")
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+        assert default_interpret() is False
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        assert default_interpret() is True
+
 
 # ------------------------------------------------------------------- ssd
 class TestSSDKernel:

@@ -94,10 +94,18 @@ def _cfg(backend, shards, **kw):
 @pytest.mark.parametrize("backend,shards", BACKEND_CASES)
 def test_backend_decodes_match_model_loop(smoke_model, backend, shards):
     """Whatever tier sits behind the scheduler, served greedy tokens equal
-    the plain model loop's (the pre-refactor paged path's contract)."""
+    the plain model loop's (the pre-refactor paged path's contract).
+
+    device_kv pinned dense: with a MIXED ladder the bit-plane device path
+    truncates decode reads for real (that is its point), so only the dense
+    layout promises model-loop-exact tokens under this ladder; the
+    bit-plane layout's token conformance — full-precision bit-identity
+    against the dense path — has its own test below."""
     model, params = smoke_model
     prompts = [_prompt(37), _prompt(80, 11)]
-    sched, reqs = _serve(model, params, _cfg(backend, shards, ladder=LADDER),
+    sched, reqs = _serve(model, params,
+                         _cfg(backend, shards, ladder=LADDER,
+                              device_kv="dense"),
                          prompts, max_new=6)
     for r, p in zip(reqs, prompts):
         assert r.output == _reference_greedy(model, params, p, 6, 192), (
@@ -144,8 +152,7 @@ def test_pad_free_savings_invariant(smoke_model, backend, shards):
     sched = ContinuousScheduler(model, params, _cfg(backend, shards))
     sched.submit(Request(rid=0, prompt=_prompt(n), max_new_tokens=8))
     sched.step()  # idle scheduler: full admission + first decode token
-    cache = sched.backend.cache
-    ch = cache["k"].shape[-2] * cache["k"].shape[-1]
+    ch = model.cfg.n_kv_heads * model.cfg.head_dim  # layout-agnostic
     per_tok = 2 * ch * 2  # k+v streams, bf16
     logical = sum(t.store.footprint()["logical_bytes"]
                   for t in sched.backend.tiers)
@@ -405,3 +412,156 @@ def test_ring_backend_rejects_full_attention(smoke_model):
     with pytest.raises(ValueError, match="full attention"):
         ContinuousScheduler(model, params,
                             EngineConfig(max_ctx=64, backend="ring"))
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane device KV (ISSUE 5): the ladder's bytes become wall-clock bytes
+# ---------------------------------------------------------------------------
+
+FULL_LADDER = PrecisionLadder([(-1, 16)])  # keep=16 everywhere: lossless
+
+
+@pytest.mark.parametrize("backend,shards", BACKEND_CASES)
+def test_bitplane_full_precision_is_bit_identical(smoke_model, backend,
+                                                  shards):
+    """device_kv='bitplane' at keep=16 serves bit-identical greedy tokens
+    to the dense device path on every backend: bf16 <-> bit-plane packing
+    is a bitcast, so the Pallas rung kernel reads exactly the dense
+    cache's values."""
+    model, params = smoke_model
+    prompts = [_prompt(37), _prompt(80, 11)]
+
+    def run(device_kv, ladder):
+        _, reqs = _serve(
+            model, params,
+            _cfg(backend, shards, device_kv=device_kv, ladder=ladder),
+            prompts, max_new=6,
+        )
+        return [r.output for r in reqs]
+
+    dense = run("dense", None)
+    assert run("bitplane", None) == dense
+    assert run("bitplane", FULL_LADDER) == dense  # assigned, all 16 planes
+
+
+def test_bitplane_ring_full_precision_is_bit_identical(ring_model):
+    """Same conformance through the ring backend — per-slot sliding-window
+    planes, including a prompt longer than the window."""
+    model, params = ring_model
+
+    def run(device_kv):
+        cfg = EngineConfig(max_batch=2, max_ctx=96, backend="ring",
+                           store_layers=2, device_kv=device_kv)
+        _, reqs = _serve(model, params, cfg,
+                         [_prompt(40), _prompt(70, 9)], max_new=8)
+        return [r.output for r in reqs]
+
+    assert run("bitplane") == run("dense")
+
+
+@pytest.mark.parametrize("backend,shards", BACKEND_CASES + [("ring", 1)])
+def test_bitplane_device_bytes_equal_controller_kv_read(
+        smoke_model, ring_model, backend, shards):
+    """ISSUE 5 acceptance: under a mixed ladder — with eviction thrash and
+    engine windows small enough to defer fetches across steps — the device
+    path's bytes (``device_bytes_read``, accumulated per serviced fetch at
+    the planes the kernel maps) equal the controller's plane-scaled kv_read
+    bytes exactly, and sit strictly below the dense path's full-precision
+    reads."""
+    model, params = (ring_model if backend == "ring" else smoke_model)
+    # ring: the 32-token window holds only 2 live pages, which LADDER's
+    # top rung would keep at full precision wholesale — rank just one
+    ladder = (PrecisionLadder([(1, 16), (-1, 4)]) if backend == "ring"
+              else LADDER)
+    kw = dict(
+        device_kv="bitplane", ladder=ladder, max_stored_bytes=10 * 1024,
+        engine=MemCtlConfig(lanes=2, step_cycles=512),
+    )
+    cfg = (_cfg(backend, shards, **kw) if backend != "ring" else
+           EngineConfig(max_batch=2, max_ctx=96, backend="ring",
+                        store_layers=2, **kw))
+    sched, _ = _serve(model, params, cfg, [_prompt(80), _prompt(80, 3)],
+                      max_new=16)
+    rep = sched.report()
+    assert rep["kv_evictions"] > 0  # the budget really thrashed
+    dev_controller = sum(t.controller.stats.kind_device_bytes("kv_read")
+                         for t in sched.backend.tiers)
+    assert rep["device_bytes_read"] == dev_controller > 0
+    assert rep["device_bytes_read"] == rep["kv_read_device_bytes"]
+    assert rep["device_bytes_read"] < rep["kv_fetch_logical"]
+
+
+def test_dense_device_path_exposes_accounting_gap(smoke_model):
+    """The dense device cache reads full precision no matter what the
+    ladder charges: device_bytes_read == the pad-free logical fetch bytes,
+    strictly above the plane-scaled accounting — the gap the bit-plane
+    layout exists to close."""
+    model, params = smoke_model
+    sched, _ = _serve(model, params,
+                      _cfg("paged", 1, device_kv="dense", ladder=LADDER),
+                      [_prompt(80)], max_new=8)
+    rep = sched.report()
+    assert rep["device_bytes_read"] == rep["kv_fetch_logical"] > 0
+    assert rep["device_bytes_read"] > rep["kv_read_device_bytes"]
+
+
+def test_bitplane_ladder_reranks_reach_the_device_plane_map(smoke_model):
+    """_assign_ladder_planes must push each re-rank into the device cache's
+    per-page plane map: what the NEXT decode step's kernel reads is what
+    the store will charge.  Values are snapped to the ladder's rung set
+    (== the static keeps the kernel compiled for)."""
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params,
+                                _cfg("paged", 1, device_kv="bitplane",
+                                     ladder=LADDER))
+    sched.submit(Request(rid=0, prompt=_prompt(80), max_new_tokens=40))
+    for _ in range(3):
+        sched.step()
+    backend = sched.backend
+    keeps = set(backend.device_keeps())
+    st = backend._slots[0]
+    assert st.page_planes, "the 80-token prompt must have ranked pages"
+    row = np.asarray(backend.cache["planes"])[0]
+    assert set(row.tolist()) <= keeps
+    for p, keep in st.page_planes.items():
+        assert keep in keeps
+        assert row[p] == keep, (p, keep, row)
+    # decode until another page fills -> a re-rank happened; map follows
+    before = dict(st.page_planes)
+    while dict(backend._slots[0].page_planes) == before:
+        sched.step()
+    row2 = np.asarray(backend.cache["planes"])[0]
+    for p, keep in backend._slots[0].page_planes.items():
+        assert row2[p] == keep
+    sched.run_until_drained()
+
+
+def test_ring_bitplane_head_reclaims_rows_at_full_precision(ring_model):
+    """Boundary policy, pinned at the exact page-aligned step: the moment
+    the NEXT append would land in a ranked page's first device row, that
+    page's plane-map entry falls back to full precision — the newest token
+    must never be attended at a dying page's truncated rung."""
+    model, params = ring_model  # window = 32 -> 2 device pages
+    cfg = EngineConfig(max_batch=1, max_ctx=96, backend="ring",
+                       store_layers=1, device_kv="bitplane",
+                       ladder=PrecisionLadder([(-1, 4)]))
+    sched = ContinuousScheduler(model, params, cfg)
+    sched.submit(Request(rid=0, prompt=_prompt(40), max_new_tokens=40))
+    while int(sched._lens[0]) < 47:
+        sched.step()
+    # ln == 47: page 1 (ring rows 16..31) is still fully its own -> rung 4
+    assert np.asarray(sched.backend.cache["planes"])[0, 1] == 4
+    sched.step()
+    # ln == 48: the next append lands at ring slot 16 — page 1's first row
+    assert np.asarray(sched.backend.cache["planes"])[0, 1] == 16
+    sched.run_until_drained()
+
+
+def test_bitplane_rejects_unpackable_head_dim(smoke_model):
+    cfg_bad = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                                  head_dim=12, n_heads=4, n_kv_heads=2)
+    model = build_model(cfg_bad)
+    with pytest.raises(ValueError, match="head_dim"):
+        make_backend(model, _cfg("paged", 1, device_kv="bitplane"))
+    with pytest.raises(ValueError, match="device_kv"):
+        make_backend(smoke_model[0], _cfg("paged", 1, device_kv="fp4"))

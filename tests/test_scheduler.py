@@ -361,8 +361,7 @@ def test_chunked_prefill_is_pad_free(smoke_model):
     assert int(sched._lens[0]) == n + 1
     assert sched.report()["prefill_tokens"] == n
     # exact-length tail page: logical accounting counts 37 tokens, not 48
-    cache = sched.backend.cache
-    ch = cache["k"].shape[-2] * cache["k"].shape[-1]
+    ch = model.cfg.n_kv_heads * model.cfg.head_dim  # layout-agnostic
     per_tok = 2 * ch * 2  # k+v streams, bf16
     assert sched.store.footprint()["logical_bytes"] == 2 * n * per_tok
     # stored pages hold the real KV (tail pad rows are repeats of the last
@@ -405,6 +404,41 @@ def test_chunked_admission_overlaps_decode(smoke_model):
     assert len(a.output) == 5 and len(b.output) == 1
     sched.run_until_drained()
     assert a.done and b.done and len(b.output) == 4
+
+
+def test_async_admission_keeps_chunk_dispatch_rate(smoke_model):
+    """ISSUE 5 satellite: prefill chunks now dispatch without a per-chunk
+    host sync and the backend's storage flush runs after the decode
+    dispatch — the admission PACING must be unchanged: a joining prompt
+    advances exactly ``prefill_chunks_per_step`` chunks per step while the
+    batch decodes, and decode never stalls."""
+    model, params = smoke_model
+    for cps in (1, 2):
+        sched = ContinuousScheduler(model, params, EngineConfig(
+            max_batch=2, max_ctx=256, store_kv_compressed=False,
+            prefill_chunks_per_step=cps,
+        ))
+        a = Request(rid=0, prompt=_prompt(16), max_new_tokens=30)
+        sched.submit(a)
+        for _ in range(2):
+            sched.step()
+        # 213 tokens -> chunks 128, 64, 16, 16(ragged): 4 dispatches
+        b = Request(rid=1, prompt=_prompt(213, 7), max_new_tokens=2)
+        sched.submit(b)
+        deltas = []
+        while True:
+            before = sched.stats["prefill_chunks"]
+            out_a = len(a.output)
+            sched.step()
+            deltas.append(sched.stats["prefill_chunks"] - before)
+            assert len(a.output) == out_a + 1, "decode stalled on admission"
+            slot_b = next((s for s in sched._slots
+                           if s is not None and s.req.rid == 1), None)
+            if slot_b is not None and not slot_b.prefilling:
+                break
+        assert deltas == [cps] * (4 // cps)
+        sched.run_until_drained()
+        assert a.done and b.done
 
 
 # ---------------------------------------------------------------------------
