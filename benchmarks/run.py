@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -41,7 +42,9 @@ MODULES = [
       "smoke": dict(n_requests=5, rate=0.8, max_steps=100)}),
     ("serving_bitplane", "benchmarks.serving_bitplane",
      {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
-      "smoke": dict(n_requests=4, rate=0.8, max_steps=80)}),
+      "smoke": dict(n_requests=4, rate=0.8, max_steps=80),
+      # bandwidth-campaign artifact, written next to the --json output
+      "artifact": "BENCH_serving.json"}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]
@@ -68,6 +71,11 @@ def main(argv=None) -> int:
             kwargs = opts.get("fast", {})
         else:
             kwargs = opts.get("full", {})
+        if args.json and "artifact" in opts:
+            # campaign modules also write a standalone artifact file (the
+            # CI job uploads it) into the --json output's directory
+            kwargs = dict(kwargs, json_path=os.path.join(
+                os.path.dirname(args.json) or ".", opts["artifact"]))
         t0 = time.time()
         try:
             mod = __import__(modpath, fromlist=["run"])

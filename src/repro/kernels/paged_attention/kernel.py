@@ -1,14 +1,27 @@
 """Paged decode attention over a bit-plane-packed KV cache (paper Fig. 5/6
-device path): one kernel invocation serves a contiguous page range at a
-fixed precision (``keep`` planes); the ops wrapper composes rungs of the
-Quest ladder (§II.C) and merges their online-softmax partials.
+device path).
 
-HBM traffic per rung = keep/16 of the bf16 KV bytes in that range — the
-"memory bandwidth scales proportionally with dynamic quantization" claim,
-enforced structurally by the BlockSpec (planes keep..15 are never mapped).
+Two kernels serve the ladder:
 
-Grid (B, Hkv, S/bs), S innermost; scratch carries m/l/acc.  The kernel
-emits UNNORMALISED partials (o·l, m, l) so rungs merge exactly.
+* ``paged_attention_rung`` — one invocation per precision rung (a page set
+  at a fixed ``keep``); the ops wrapper composes rungs of the Quest ladder
+  (§II.C) and merges their online-softmax partials host-side.  One compile
+  per rung-set member.
+* ``paged_attention_fused`` (ISSUE 6) — ONE invocation walks the per-page
+  plane map inline: each tile's page keeps ride in SMEM, every page's
+  planes [0, keep) arrive via predicated async copies from the packed
+  planes left in ``ANY`` memory space, and planes keep..15 are never
+  touched.  No per-rung launch loop, no unnormalised-partials merge — one
+  compile per model config, whatever the ladder's rung set.
+
+HBM traffic per page = keep/16 of the bf16 KV bytes — the "memory
+bandwidth scales proportionally with dynamic quantization" claim, enforced
+structurally (rung: the BlockSpec maps only ``keep`` planes; fused: the
+plane DMA loop is predicated on the page's keep).
+
+Grid (B, Hkv, S/bs), S innermost; scratch carries m/l/acc.  The rung
+kernel emits UNNORMALISED partials (o·l, m, l) so rungs merge exactly; the
+fused kernel normalises in its finish block (nothing left to merge).
 """
 
 from __future__ import annotations
@@ -22,6 +35,12 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
+
+#: kernel-body trace counters (bumped when Pallas traces the body, i.e.
+#: once per distinct compiled variant) — the compile-count regression test
+#: reads these: a serving decode step must trace the fused kernel exactly
+#: once vs ``len(rung_set)`` rung traces.
+TRACE_COUNTS = {"rung": 0, "fused": 0}
 
 
 def default_interpret() -> bool:
@@ -49,6 +68,7 @@ def _unpack_tile(p, keep: int, bits: int):
 def _kernel(q_ref, kp_ref, vp_ref, mask_ref, o_ref, m_ref, l_ref,
             m_scr, l_scr, acc_scr, *, keep: int, bits: int, scale: float,
             n_s: int):
+    TRACE_COUNTS["rung"] += 1
     j = pl.program_id(2)
     q = q_ref[...].reshape(q_ref.shape[2], q_ref.shape[3])  # (rep, hd)
     # (keep, 1, bs, 1, hd8) -> (keep, bs, hd8)
@@ -146,3 +166,167 @@ def paged_attention_rung(
         ],
         interpret=interpret,
     )(q, k_planes, v_planes, mask)
+
+
+def _unpack_tile_keeps(p, tok_keep, bits: int):
+    """(bits, bs, hd8) uint8 planes -> (bs, hd) bf16, with per-TOKEN live
+    plane counts: token t contributes planes [0, tok_keep[t]) and planes
+    tok_keep[t].. are zeroed arithmetically (their buffer rows may hold a
+    previous tile's bytes — the DMA loop never refreshed them)."""
+    byte_w = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 8), 3)
+    bm8 = (p.astype(jnp.uint32)[..., None] >> (7 - byte_w)) & 1
+    plane_i = jax.lax.broadcasted_iota(jnp.int32, (bits, 1, 1, 1), 0)
+    live = plane_i < tok_keep.astype(jnp.int32)[None, :, None, None]
+    bm8 = jnp.where(live, bm8, 0)
+    plane_w = plane_i.astype(jnp.uint32)
+    u = (bm8 << ((bits - 1) - plane_w)).sum(axis=0)  # (bs, hd8, 8)
+    u16 = u.reshape(u.shape[0], -1).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+
+
+def _fused_kernel(q_ref, keeps_ref, mask_ref, kp_hbm, vp_hbm, o_ref,
+                  m_scr, l_scr, acc_scr, k_buf, v_buf, k_sem, v_sem, *,
+                  bits: int, scale: float, n_s: int, bs: int,
+                  page_tokens: int):
+    """Single-launch ladder decode: walks the tile's per-page plane map
+    (SMEM) and gathers each page's planes [0, keep) from the packed HBM
+    planes with predicated async copies — planes keep..15 are never moved.
+    One online softmax across the whole tile sequence; the finish block
+    normalises in-kernel (guarding fully-masked rows), so there are no
+    partials to merge and no per-rung launches."""
+    TRACE_COUNTS["fused"] += 1
+    from jax.experimental.pallas import tpu as pltpu
+
+    b_, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    ppt = bs // page_tokens  # pages per tile
+    for pp in range(ppt):
+        keep = keeps_ref[0, pp]
+        row0 = pp * page_tokens
+
+        def plane_body(i, _, keep=keep, row0=row0):
+            @pl.when(i < keep)
+            def _copy():
+                src = pl.ds(j * bs + row0, page_tokens)
+                dst = pl.ds(row0, page_tokens)
+                ck = pltpu.make_async_copy(
+                    kp_hbm.at[i, b_, src, h, :], k_buf.at[i, dst, :], k_sem
+                )
+                cv = pltpu.make_async_copy(
+                    vp_hbm.at[i, b_, src, h, :], v_buf.at[i, dst, :], v_sem
+                )
+                ck.start()
+                cv.start()
+                ck.wait()
+                cv.wait()
+            return 0
+
+        jax.lax.fori_loop(0, bits, plane_body, 0)
+
+    # per-token live plane count = its page's keep (SMEM scalars -> (bs,))
+    tok_keep = jnp.concatenate([
+        jnp.full((page_tokens,), keeps_ref[0, pp], jnp.int32)
+        for pp in range(ppt)
+    ])
+    q = q_ref[...].reshape(q_ref.shape[2], q_ref.shape[3])  # (rep, hd)
+    k = _unpack_tile_keeps(k_buf[...], tok_keep, bits)
+    v = _unpack_tile_keeps(v_buf[...], tok_keep, bits)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (rep, bs)
+    ok = mask_ref[...].reshape(1, -1) > 0
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[:, 0] * corr + p.sum(axis=1)
+    acc = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+    acc_scr[...] = acc
+
+    @pl.when(j == n_s - 1)
+    def _finish():
+        m = m_scr[:, 0]
+        l = l_scr[:, 0]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        # a row whose every position is masked: m stayed -inf, l == 0 —
+        # the division above is 0/eps only because acc stayed 0, but any
+        # residual (exp(-inf - -inf) = nan) must not escape: gate on m.
+        out = jnp.where((m > NEG_INF / 2)[:, None], out, 0.0)
+        o_ref[...] = out.reshape(o_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "bs", "page_tokens", "interpret")
+)
+def paged_attention_fused(
+    q: jnp.ndarray,
+    k_planes: jnp.ndarray,
+    v_planes: jnp.ndarray,
+    page_keeps: jnp.ndarray,
+    mask: jnp.ndarray,
+    bits: int = 16,
+    bs: int = 128,
+    page_tokens: int = 16,
+    interpret: bool | None = None,
+):
+    """One launch over the whole mixed-precision cache.
+
+    q (B, Hkv, rep, hd) bf16; k/v_planes (bits, B, S, Hkv, hd//8) uint8;
+    page_keeps (B, S/page_tokens) int32 — planes [0, keep) of each page are
+    gathered, the rest never read; mask (B, S) int8 (1 = valid token).
+    Requires S % bs == 0 and bs % page_tokens == 0 (page-aligned tiles).
+    Returns the NORMALISED output (B, Hkv, rep, hd) f32 — fully-masked rows
+    are zero."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, hkv, rep, hd = q.shape
+    s_total = k_planes.shape[2]
+    assert s_total % bs == 0 and bs % page_tokens == 0, (s_total, bs)
+    n_s = s_total // bs
+    ppt = bs // page_tokens
+    grid = (b, hkv, n_s)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, bits=bits, scale=1.0 / np.sqrt(hd), n_s=n_s,
+            bs=bs, page_tokens=page_tokens,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b_, h, j: (b_, h, 0, 0)),
+            # this tile's per-page plane counts, as SMEM scalars
+            pl.BlockSpec((1, ppt), lambda b_, h, j: (b_, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bs), lambda b_, h, j: (b_, j)),
+            # packed planes stay in HBM; the kernel gathers [0, keep) of
+            # each page itself — the predicated partial-plane fetch
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 128), jnp.float32),
+            pltpu.VMEM((rep, 128), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((bits, bs, hd // 8), jnp.uint8),
+            pltpu.VMEM((bits, bs, hd // 8), jnp.uint8),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(q, page_keeps, mask, k_planes, v_planes)

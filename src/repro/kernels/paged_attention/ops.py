@@ -8,13 +8,22 @@ softmax over the mixed-precision KV (the ref oracle computes it that way).
 ``batched_ladder_paged_attention`` is the serving entry point (ISSUE 5):
 one call covers every slot of a continuous-batching decode step.  Each slot
 carries its own valid length and its own per-page plane assignment (the
-ladder re-ranks pages per slot, so the rung geometry differs row by row);
-rungs are expressed as one kernel invocation per *distinct* plane count in
-``keeps`` with a (slot, position) participation mask, so the compile count
-is bounded by the ladder's rung set, never by batch composition.  Every
-rung maps only its ``keep`` top planes in the BlockSpec — planes keep..15
-are structurally unreadable, which is the bandwidth-proportionality
-property the device path inherits from the store (Fig. 5).
+ladder re-ranks pages per slot, so the rung geometry differs row by row).
+Two kernel strategies (``kernel=``, ISSUE 6):
+
+* ``"fused"`` (default) — ONE launch of ``paged_attention_fused``: the
+  kernel walks the per-page plane map inline (SMEM keeps + predicated
+  per-plane async copies), so the compile count is one per model config
+  and there is no host-side partials merge at all;
+* ``"rung"`` — one launch per *distinct* plane count in ``keeps`` with a
+  (slot, position) participation mask, partials merged here; the compile
+  count is bounded by the ladder's rung set.  Kept for differential
+  testing against the fused path.
+
+Either way planes keep..15 are structurally unreadable — the rung
+BlockSpec never maps them, the fused DMA loop never issues their copies —
+which is the bandwidth-proportionality property the device path inherits
+from the store (Fig. 5).
 """
 
 from __future__ import annotations
@@ -105,6 +114,7 @@ def batched_ladder_paged_attention(
     q_pos: jnp.ndarray | None = None,
     kv_pos: jnp.ndarray | None = None,
     window: int = 0,
+    kernel: str = "fused",
 ) -> jnp.ndarray:
     """Multi-slot decode step over a shared bit-plane cache.
 
@@ -112,8 +122,13 @@ def batched_ladder_paged_attention(
     page_planes (B, S/page_tokens) int32 — the plane count the ladder
     assigned to each slot's device page (entries must come from ``keeps``);
     valid_len (B,) int32 — per-slot valid cache entries; keeps — the static
-    set of distinct plane counts the ladder can assign (one rung kernel per
-    member, so compiles are bounded by the ladder, not the batch).
+    set of distinct plane counts the ladder can assign.
+
+    kernel — ``"fused"`` (one launch, the kernel gathers each page's
+    planes itself; ``keeps`` only bounds the values ``page_planes`` may
+    hold) or ``"rung"`` (one launch per member of ``keeps``, partials
+    merged here).  The fused tile walks whole pages, so a legacy cache
+    whose S is not a page multiple falls back to the rung path.
 
     q_pos (B, 1) optional absolute query positions (causality belt for
     rows whose valid_len overshoots); kv_pos (B, S) optional absolute slot
@@ -123,6 +138,8 @@ def batched_ladder_paged_attention(
     of the merge; a row with no valid entries at all returns zeros (idle
     serving slots — the scheduler discards those rows).
     """
+    if kernel not in ("fused", "rung"):
+        raise ValueError(f"kernel must be 'fused' or 'rung', got {kernel!r}")
     b, one, hp, hd = q.shape
     assert one == 1
     hkv = k_planes.shape[3]
@@ -144,6 +161,16 @@ def batched_ladder_paged_attention(
     page_of = jnp.arange(s_total) // page_tokens  # (S,) device page index
 
     bs = _pick_bs(s_total, bs)
+    if kernel == "fused" and s_total % page_tokens == 0 and bs % page_tokens == 0:
+        # the fused kernel reads planes [0, keep) of every page directly;
+        # a page outside the rung set entirely (keep <= 0) must stay
+        # unread, exactly as no rung mask would have covered it
+        mask = (ok & (page_planes[:, page_of] > 0)).astype(jnp.int8)
+        out = K.paged_attention_fused(
+            qg, k_planes, v_planes, page_planes.astype(jnp.int32), mask,
+            bits=bits, bs=bs, page_tokens=page_tokens, interpret=interpret,
+        )
+        return out.reshape(b, 1, hp, hd).astype(q.dtype)
     m_all, l_all, o_all = None, None, None
     for keep in keeps:
         mask = (ok & (page_planes[:, page_of] == keep)).astype(jnp.int8)

@@ -419,7 +419,8 @@ def _ring_chunk_append(q, k, v, hm, ck, cv, cpos, *, pos, cache_len,
 
 
 def _bitplane_cache_step(q, k, v, hm, cache, *, pos, cache_len, window,
-                         bidirectional, append_valid, kv_planes, keeps):
+                         bidirectional, append_valid, kv_planes, keeps,
+                         decode_kernel="fused"):
     """One step against a bit-plane packed device cache.
 
     cache: (k_planes, v_planes[, kv_pos]) — per-layer slices, planes
@@ -478,6 +479,7 @@ def _bitplane_cache_step(q, k, v, hm, cache, *, pos, cache_len, window,
         keeps=tuple(keeps) if keeps is not None else (bits,),
         bits=bits, q_pos=pos, kv_pos=cpos,
         window=0 if bidirectional else window,
+        kernel=decode_kernel,
     )
     return out.astype(q.dtype), ((kp, vp, cpos) if ring else (kp, vp))
 
@@ -497,6 +499,8 @@ def attn_apply(
     append_valid=None,
     kv_planes=None,
     keeps=None,
+    decode_kernel="fused",
+    stage_base=None,
 ):
     """One attention sub-layer.
 
@@ -519,6 +523,13 @@ def attn_apply(
     kv_planes/keeps: per-device-page ladder plane map + its static value
     set, for bit-plane packed caches (uint8 plane tuples — see
     :func:`_bitplane_cache_step`); ignored for dense caches.
+    decode_kernel: "fused" | "rung" — Pallas strategy for bit-plane decode
+    (one plane-gathering launch vs one launch per ladder rung).
+    stage_base: optional (B,) int32 — per-row staging base for a 4-tuple
+    staged cache under continuous batching: row i's main cache holds
+    [0, stage_base[i]) and its staging ring holds [stage_base[i],
+    cache_len[i]].  Required whenever cache_len is per-row and the cache
+    is staged (the scalar staged path derives it as ``cache_len % ws``).
     Returns (y, new_cache) — with cache=None, new_cache is the freshly
     projected (k, v) pair (post-rope), which prefill uses to build the cache.
     """
@@ -548,7 +559,50 @@ def attn_apply(
             q, k, v, hm, cache, pos=pos, cache_len=cache_len,
             window=window, bidirectional=bidirectional,
             append_valid=append_valid, kv_planes=kv_planes, keeps=keeps,
+            decode_kernel=decode_kernel,
         )
+    elif len(cache) == 4 and stage_base is not None and \
+            getattr(cache_len, "ndim", 0) == 1:
+        # Staged decode under continuous batching (ISSUE 6 satellite): the
+        # big cache is read-only this step; row i's token lands in its
+        # staging-ring slot ``cache_len[i] - stage_base[i]`` and rows whose
+        # ring just filled fold it back into the main cache in one scatter.
+        # Mid-prefill rows arrive with stage_base == cache_len (the
+        # scheduler anchors staging at the prefill end), so their dummy
+        # token lands at staging slot 0 and — like the dense per-row path —
+        # is masked for every real query and overwritten later.
+        ck, cv, sk, sv = cache
+        ws = sk.shape[1]
+        rows = jnp.arange(ck.shape[0])
+        staged_n = cache_len - stage_base  # (B,) in [0, ws)
+        slot = jnp.clip(staged_n, 0, ws - 1)
+        sk = sk.at[rows, slot].set(k[:, 0].astype(sk.dtype))
+        sv = sv.at[rows, slot].set(v[:, 0].astype(sv.dtype))
+        stage_pos = stage_base[:, None] + jnp.arange(ws, dtype=jnp.int32)[None]
+        parts = [
+            decode_attention(
+                q, ck, cv, q_pos=pos, kv_valid=stage_base,
+                window=window, bidirectional=bidirectional,
+                return_partials=True,
+            ),
+            # stale ring slots from the previous window sit at stage_pos >=
+            # cache_len + 1 and mask out; so do idle rows (stage_base == 0).
+            decode_attention(
+                q, sk, sv, q_pos=pos, kv_valid=cache_len + 1,
+                window=window, bidirectional=bidirectional,
+                kv_pos=stage_pos, return_partials=True,
+            ),
+        ]
+        out = merge_attention_partials(parts).astype(q.dtype)
+        flush = staged_n + 1 == ws  # ring full after this append
+        idx = jnp.clip(stage_pos, 0, ck.shape[1] - 1)  # (B, ws)
+        ck = ck.at[rows[:, None], idx].set(
+            jnp.where(flush[:, None, None, None], sk.astype(ck.dtype),
+                      ck[rows[:, None], idx]))
+        cv = cv.at[rows[:, None], idx].set(
+            jnp.where(flush[:, None, None, None], sv.astype(cv.dtype),
+                      cv[rows[:, None], idx]))
+        new_cache = (ck, cv, sk, sv)
     elif len(cache) == 4:
         # Staged decode cache (§Perf Cell-3): the big cache (ck, cv) is
         # READ-ONLY this step — the new token lands in a small staging ring

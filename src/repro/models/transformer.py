@@ -83,11 +83,13 @@ def head_weight(params):
 
 
 def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache,
-               append_valid=None, kv_planes=None, keeps=None):
+               append_valid=None, kv_planes=None, keeps=None,
+               decode_kernel="fused", stage_base=None):
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     attn_out, new_kv = attn_apply(
         lp["attn"], h, cfg, pos=pos, cache=cache_kv, cache_len=cache_len,
         append_valid=append_valid, kv_planes=kv_planes, keeps=keeps,
+        decode_kernel=decode_kernel, stage_base=stage_base,
     )
     x = x + attn_out
     h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
@@ -103,11 +105,14 @@ def _layer_seq(lp, x, cfg, pos, cache_kv, cache_len, want_cache,
 
 
 def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None,
-              keeps=None):
+              keeps=None, decode_kernel="fused"):
     """x: (B, S, d). cache: {'k','v'} stacked (L, B, Smax, Hkv, hd) + 'len'
     [+ 'pos' (L, B, Smax) for sliding-window ring caches; + 'valid' (scalar,
     not per-layer) = absolute end of real appended tokens for a ring chunk
-    append — see ``attn_apply(append_valid=...)``].
+    append — see ``attn_apply(append_valid=...)``; + 'sbase' (B,) int32
+    per-row staging bases for staged caches under continuous batching —
+    shared across layers like 'valid', see ``attn_apply(stage_base=...)``].
+    ``decode_kernel`` picks the bit-plane decode strategy ("fused"|"rung").
 
     Bit-plane serving caches carry {'k_planes','v_planes'} stacked
     (L, bits, B, Smax, Hkv, hd//8) uint8 in place of {'k','v'}, plus a
@@ -122,6 +127,10 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None,
     if cache is not None and "valid" in cache:
         append_valid = cache["valid"]
         cache = {k: v for k, v in cache.items() if k != "valid"}
+    stage_base = None
+    if cache is not None and "sbase" in cache:
+        stage_base = cache["sbase"]
+        cache = {k: v for k, v in cache.items() if k != "sbase"}
     cache_len = cache["len"] if cache is not None else jnp.int32(0)
     bitplane = cache is not None and "k_planes" in cache
     kv_planes = cache.get("planes") if bitplane else None
@@ -139,7 +148,9 @@ def run_stack(params, cfg, x, pos, cache=None, want_cache=False, remat=None,
         x, new_kv, aux = _layer_seq(lp, x, cfg, pos, kv, cache_len,
                                     want_cache or cache is not None,
                                     append_valid=append_valid,
-                                    kv_planes=kv_planes, keeps=keeps)
+                                    kv_planes=kv_planes, keeps=keeps,
+                                    decode_kernel=decode_kernel,
+                                    stage_base=stage_base)
         ys = new_kv if (want_cache or cache is not None) else None
         return (x, aux_acc + aux), ys
 
@@ -328,7 +339,7 @@ def lm_prefill_chunk(params, cfg, tokens, cache, slot, start, last_idx):
     return logits.astype(jnp.float32), out
 
 
-def lm_decode(params, cfg, token, cache, keeps=None):
+def lm_decode(params, cfg, token, cache, keeps=None, decode_kernel="fused"):
     """token: (B,) int32; cache from prefill or init_decode_cache.
 
     ``cache["len"]`` may be a scalar (aligned batch) or a (B,) vector of
@@ -338,8 +349,13 @@ def lm_decode(params, cfg, token, cache, keeps=None):
 
     Bit-plane caches ({'k_planes','v_planes','planes'}) additionally take
     ``keeps`` — the static set of plane counts the serving ladder can
-    assign — and run decode attention through the Pallas partial-plane rung
-    kernel instead of the dense einsum path.
+    assign — and run decode attention through a Pallas partial-plane kernel
+    instead of the dense einsum path; ``decode_kernel`` picks the strategy
+    ("fused" = one plane-gathering launch, "rung" = one launch per plane
+    count).
+
+    A staged cache with a per-row 'sbase' (continuous batching) advances
+    each row's staging base here when its ring filled and was folded back.
 
     Returns (logits (B, Vpad), new cache).
     """
@@ -350,10 +366,15 @@ def lm_decode(params, cfg, token, cache, keeps=None):
     else:
         pos = jnp.broadcast_to(ln, (x.shape[0], 1)).astype(jnp.int32)
     x, new_cache, _ = run_stack(params, cfg, x, pos, cache=cache, remat=False,
-                                keeps=keeps)
+                                keeps=keeps, decode_kernel=decode_kernel)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, head_weight(params))[:, 0]
     new_cache["len"] = cache["len"] + 1
+    if "sbase" in cache:
+        ws = cache["sk"].shape[2]
+        staged_n = ln - cache["sbase"]
+        new_cache["sbase"] = cache["sbase"] + jnp.where(
+            (staged_n >= 0) & (staged_n + 1 == ws), ws, 0)
     return logits.astype(jnp.float32), new_cache
 
 

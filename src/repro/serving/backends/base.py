@@ -98,6 +98,10 @@ class SlotState:
     #: last plane-map row pushed to the device cache (bit-plane layouts) —
     #: lets per-token re-syncs skip the device write when nothing changed
     device_row: Optional[np.ndarray] = None
+    #: staged decode (``decode_staging > 0``): first token living in the
+    #: slot's staging ring — main cache holds [0, stage_base), the ring
+    #: holds [stage_base, len); mirrors the device 'sbase' row
+    stage_base: int = 0
 
 
 class MemTier:
@@ -225,9 +229,12 @@ class KVBackend(abc.ABC):
             raise NotImplementedError(
                 "sliding-window ring caches need backend='ring'"
             )
-        if mcfg.decode_staging > 0:
-            raise NotImplementedError(
-                "decode staging rings conflict with per-slot lengths"
+        if mcfg.decode_staging > 0 and cfg.device_kv != "dense":
+            raise ValueError(
+                f"decode_staging={mcfg.decode_staging} with "
+                f"device_kv={cfg.device_kv!r} is not supported: the staging "
+                f"ring appends dense bf16 rows, so staged decode needs "
+                f"device_kv='dense'"
             )
         cls.check_device_kv(mcfg, cfg)
 
@@ -276,9 +283,11 @@ class KVBackend(abc.ABC):
 
     def _build_cache(self):
         cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_ctx)
-        assert "k" in cache and "v" in cache and "sk" not in cache and "pos" not in cache
+        assert "k" in cache and "v" in cache and "pos" not in cache
         cache = self._apply_device_layout(cache)
         cache["len"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
+        if "sk" in cache:  # staged decode: per-row staging bases (ISSUE 6)
+            cache["sbase"] = jnp.zeros(self.cfg.max_batch, jnp.int32)
         return cache
 
     def _apply_device_layout(self, cache):
@@ -304,8 +313,23 @@ class KVBackend(abc.ABC):
             keeps |= {planes for _, planes in self.cfg.ladder.rungs}
         return tuple(sorted(keeps))
 
-    def sync_lens(self, lens) -> None:
-        self._cache["len"] = jnp.asarray(lens)
+    def sync_lens(self, lens, stage_anchor=None) -> None:
+        lens = jnp.asarray(lens)
+        self._cache["len"] = lens
+        if "sbase" in self._cache:
+            # authoritative per-row staging base for this decode step:
+            # windows of ws tokens anchored at each row's prefill end
+            # (``stage_anchor``; -1 = unanchored — idle / mid-prefill rows
+            # stage nothing, so their base tracks the length itself)
+            ws = self._cache["sk"].shape[2]
+            if stage_anchor is None:
+                anchor = lens
+            else:
+                a = jnp.asarray(stage_anchor)
+                anchor = jnp.where(a >= 0, a, lens)
+            self._cache["sbase"] = (
+                anchor + ws * ((lens - anchor) // ws)
+            ).astype(jnp.int32)
 
     def adopt_prefill(self, slot_id: int, pcache, s: int) -> None:
         """Legacy padded admission: copy a single-sequence prefill cache
@@ -364,6 +388,17 @@ class KVBackend(abc.ABC):
             return tuple(out)
         k = np.asarray(self._cache["k"][:ls, slot_id, rows], np.float32)
         v = np.asarray(self._cache["v"][:ls, slot_id, rows], np.float32)
+        st = self._slots.get(slot_id)
+        if "sk" in self._cache and st is not None:
+            # staged decode: tokens >= stage_base still live in the staging
+            # ring, not the main cache — read them from their ring slots
+            sb = st.stage_base
+            ws = self._cache["sk"].shape[2]
+            for tok in range(max(t0, sb), min(t1, sb + ws)):
+                k[:, tok - t0] = np.asarray(
+                    self._cache["sk"][:ls, slot_id, tok - sb], np.float32)
+                v[:, tok - t0] = np.asarray(
+                    self._cache["sv"][:ls, slot_id, tok - sb], np.float32)
         return (k.reshape(ls, t, -1).astype(ml_dtypes.bfloat16),
                 v.reshape(ls, t, -1).astype(ml_dtypes.bfloat16))
 
@@ -400,6 +435,9 @@ class KVBackend(abc.ABC):
         completed pages to the tier (full pages as chunks land; on the
         final call also the ragged tail as an exact-length page), then
         assign ladder planes once the prompt is complete."""
+        if final and self.mcfg.decode_staging > 0:
+            # prompt KV landed in the main cache; staging anchors here
+            self._slots[slot_id].stage_base = end
         if not self.cfg.store_kv_compressed:
             return
         st = self._slots[slot_id]
@@ -421,9 +459,14 @@ class KVBackend(abc.ABC):
         """One decode token landed at position ln-1: store the page if it
         just filled (and re-rank the ladder), then queue this step's
         decode-critical fetch traffic for the slot."""
+        st = self._slots[slot_id]
+        ws = self.mcfg.decode_staging
+        if ws > 0 and ln - st.stage_base >= ws:
+            # the device step just folded a full staging window back into
+            # the main cache — advance the host mirror in lockstep
+            st.stage_base += ws
         if not self.cfg.store_kv_compressed:
             return
-        st = self._slots[slot_id]
         self._expire_dead_pages(st, ln)
         if ln % PAGE_TOKENS == 0:  # a decode page just filled
             self._write_span(slot_id, ln - PAGE_TOKENS, ln)
@@ -559,7 +602,16 @@ class KVBackend(abc.ABC):
         precision is a bf16 bitcast)."""
         rows = self._device_rows(t0, t1)
         if self.device_kv != "bitplane":
-            return self._cache["k"][-1, slot_id, rows]
+            k = self._cache["k"][-1, slot_id, rows]
+            st = self._slots.get(slot_id)
+            if "sk" in self._cache and st is not None:
+                # staged tokens (incl. the q-proxy row ln-1) live in the ring
+                sb = st.stage_base
+                ws = self._cache["sk"].shape[2]
+                for tok in range(max(t0, sb), min(t1, sb + ws)):
+                    k = k.at[tok - t0].set(
+                        self._cache["sk"][-1, slot_id, tok - sb])
+            return k
         from repro.kernels.paged_attention.ref import unpack_kv_ref
 
         pl = self._cache["k_planes"][-1][:, slot_id][:, rows]

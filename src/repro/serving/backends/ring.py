@@ -59,8 +59,12 @@ class RingBackend(KVBackend):
                 f"prefill bucket ({PAGE_TOKENS} tokens)"
             )
         if mcfg.decode_staging > 0:
-            raise NotImplementedError(
-                "staged decode caches are not per-slot addressable yet"
+            raise ValueError(
+                f"decode_staging={mcfg.decode_staging} with backend='ring' "
+                f"is not supported: a sliding-window ring cache already "
+                f"appends in place, so there is no staging window to fold — "
+                f"use backend='paged' with device_kv='dense' for staged "
+                f"decode"
             )
         if cfg.prefill_mode != "bucketed":
             raise ValueError(

@@ -38,6 +38,19 @@ from repro.serving.kv_cache import PageKey
 class ShardedBackend(KVBackend):
     name = "sharded"
 
+    # ------------------------------------------------------------ validation
+    @classmethod
+    def check_model(cls, mcfg, cfg) -> None:
+        if mcfg.decode_staging > 0:
+            raise ValueError(
+                f"decode_staging={mcfg.decode_staging} with "
+                f"backend='sharded' is not supported: the staging ring is "
+                f"not split along the page route, so per-shard byte "
+                f"accounting would be wrong — use backend='paged' with "
+                f"device_kv='dense' for staged decode"
+            )
+        super().check_model(mcfg, cfg)
+
     def __init__(self, model, cfg, controller: MemoryController | None = None,
                  stats=None):
         self.shards = max(1, int(cfg.shards))

@@ -56,9 +56,11 @@ with the serving loop the paper's accounting actually pays off in:
   ``backpressure_steps``).
 
 Scope: dense-cache families ({"k","v","len"}; dense/moe).  Sliding-window
-(ring) caches are served by ``backend="ring"``; staged decode caches still
-raise.  ``engine.ServingEngine`` keeps the old one-shot ``run()`` as a thin
-submit+drain wrapper.
+(ring) caches are served by ``backend="ring"``; staged decode caches
+(``decode_staging > 0``) are served by the paged backend under
+``device_kv="dense"`` (ISSUE 6) — other combinations raise a precise
+``ValueError``.  ``engine.ServingEngine`` keeps the old one-shot ``run()``
+as a thin submit+drain wrapper.
 """
 
 from __future__ import annotations
@@ -162,6 +164,16 @@ class EngineConfig:
         default_factory=lambda: os.environ.get("REPRO_SERVING_DEVICE_KV",
                                                "dense")
     )
+    #: Pallas decode strategy for device_kv='bitplane' (ISSUE 6):
+    #: 'fused' — ONE kernel launch per decode step that walks the per-page
+    #: plane map inline (one compile per model config); 'rung' — one launch
+    #: per distinct ladder plane count with a host-side partials merge
+    #: (compiles bounded by the rung set; kept for differential testing).
+    #: The default honours the REPRO_DECODE_KERNEL env var (CI leg).
+    decode_kernel: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_DECODE_KERNEL",
+                                               "fused")
+    )
     #: admission backpressure threshold: defer new admits while the
     #: engine's modeled service latency lags the wall clock by more than
     #: this many ns (None = admit regardless, the pre-backpressure
@@ -227,17 +239,20 @@ def chunk_schedule(prompt_len: int, buckets: List[int]) -> List[tuple]:
 _JIT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
-def _jitted(model: Model, keeps: tuple | None = None):
+def _jitted(model: Model, keeps: tuple | None = None,
+            decode_kernel: str = "fused"):
     per = _JIT_CACHE.setdefault(model, {})
+    key = (keeps, decode_kernel)
     try:
-        return per[keeps]
+        return per[key]
     except KeyError:
         chunk = (jax.jit(model.prefill_chunk)
                  if model.prefill_chunk is not None else None)
         decode = (jax.jit(model.decode) if keeps is None else
-                  jax.jit(lambda p, t, c: model.decode(p, t, c, keeps=keeps)))
+                  jax.jit(lambda p, t, c: model.decode(
+                      p, t, c, keeps=keeps, decode_kernel=decode_kernel)))
         fns = (jax.jit(model.prefill), decode, chunk)
-        per[keeps] = fns
+        per[key] = fns
         return fns
 
 
@@ -255,6 +270,11 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prefill_mode must be 'bucketed' or 'padded', "
                 f"got {cfg.prefill_mode!r}"
+            )
+        if cfg.decode_kernel not in ("fused", "rung"):
+            raise ValueError(
+                f"decode_kernel must be 'fused' or 'rung', "
+                f"got {cfg.decode_kernel!r}"
             )
         if cfg.prefill_mode == "bucketed" and cfg.max_ctx % PAGE_TOKENS != 0:
             # a ragged final bucket landing near the cache end would be
@@ -287,7 +307,7 @@ class ContinuousScheduler:
         self.backend = make_backend(model, cfg, controller=controller,
                                     stats=self.stats)
         self._prefill, self._decode, self._prefill_chunk = _jitted(
-            model, self.backend.device_keeps()
+            model, self.backend.device_keeps(), cfg.decode_kernel
         )
         # chunked admission needs the chunk kernel; families without one
         # (none today among dense/moe) fall back to the padded path
@@ -566,7 +586,15 @@ class ContinuousScheduler:
                 # is masked by kv_valid and overwritten by the next prefill
                 # chunk or admission (see models/attention per-slot path)
                 keys.append(self._zero_key)
-        self.backend.sync_lens(self._lens)
+        # staging anchor for staged decode caches: a post-prefill row's
+        # staging window is anchored at its prefill end (its main cache
+        # holds the whole prompt, flushed windows follow in ws strides);
+        # -1 = no anchor (idle / mid-prefill rows stage nothing)
+        anchor = np.full(b, -1, np.int32)
+        for i, slot in enumerate(self._slots):
+            if slot is not None and not slot.prefilling:
+                anchor[i] = slot.prefill_pos
+        self.backend.sync_lens(self._lens, stage_anchor=anchor)
 
         t0 = time.time()
         logits, cache = self._decode(

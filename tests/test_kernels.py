@@ -216,6 +216,61 @@ class TestPagedAttention:
         )
         assert np.all(np.asarray(idle, np.float32) == 0)
 
+    def test_fused_matches_rung_kernel(self, rng):
+        """ISSUE 6 tentpole: the single-launch fused kernel (per-page plane
+        gather in-kernel) equals the per-rung launch loop + host merge on
+        scattered per-slot plane maps and ragged valid lengths."""
+        from repro.kernels.paged_attention.ops import (
+            batched_ladder_paged_attention,
+            pack_kv_planes,
+        )
+
+        B, S, Hkv, rep, hd = 3, 96, 2, 2, 16
+        q = _bf16(rng, B, 1, Hkv * rep, hd)
+        k = _bf16(rng, B, S, Hkv, hd)
+        v = _bf16(rng, B, S, Hkv, hd)
+        kp, vp = pack_kv_planes(k), pack_kv_planes(v)
+        pp = np.asarray(rng.choice([4, 8, 16], (B, S // 16)), np.int32)
+        valid = jnp.asarray([96, 50, 17], jnp.int32)
+        args = (q, kp, vp, jnp.asarray(pp), valid)
+        fused = batched_ladder_paged_attention(*args, keeps=(4, 8, 16),
+                                               kernel="fused")
+        rung = batched_ladder_paged_attention(*args, keeps=(4, 8, 16),
+                                              kernel="rung")
+        np.testing.assert_allclose(
+            np.asarray(fused, np.float32), np.asarray(rung, np.float32),
+            atol=0.01,
+        )
+        with pytest.raises(ValueError, match="kernel"):
+            batched_ladder_paged_attention(*args, keeps=(16,), kernel="warp")
+
+    @pytest.mark.parametrize("kernel", ["fused", "rung"])
+    def test_fully_masked_row_returns_zeros(self, kernel, rng):
+        """ISSUE 6 satellite bugfix: a slot whose EVERY page is masked
+        leaves m = -inf, l = 0 — the final normalisation must not divide
+        unguarded.  Pinned on both kernel paths with a row of all-masked
+        pages (plane count 0 on every page) and a row with valid_len 0."""
+        from repro.kernels.paged_attention.ops import (
+            batched_ladder_paged_attention,
+            pack_kv_planes,
+        )
+
+        B, S, Hkv, rep, hd = 3, 64, 2, 2, 16
+        q = _bf16(rng, B, 1, Hkv * rep, hd)
+        k = _bf16(rng, B, S, Hkv, hd)
+        v = _bf16(rng, B, S, Hkv, hd)
+        kp, vp = pack_kv_planes(k), pack_kv_planes(v)
+        pp = np.full((B, S // 16), 16, np.int32)
+        pp[1] = 0  # row 1: every page masked out of the ladder entirely
+        valid = jnp.asarray([64, 64, 0], jnp.int32)  # row 2: nothing valid
+        out = np.asarray(batched_ladder_paged_attention(
+            q, kp, vp, jnp.asarray(pp), valid, keeps=(4, 8, 16),
+            kernel=kernel,
+        ), np.float32)
+        assert np.all(np.isfinite(out))
+        assert np.all(out[1] == 0) and np.all(out[2] == 0)
+        assert np.any(out[0] != 0)  # live row unaffected by the guard
+
     def test_interpret_default_follows_backend(self, monkeypatch):
         """ISSUE 5 satellite: interpret=None resolves from the JAX backend
         (interpreter on CPU, compiled elsewhere) with an env override — the

@@ -557,6 +557,113 @@ def test_ring_bitplane_head_reclaims_rows_at_full_precision(ring_model):
     sched.run_until_drained()
 
 
+# ---------------------------------------------------------------------------
+# Fused single-kernel ladder decode (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,shards",
+                         [("paged", 1), ("sharded", 2), ("ring", 1)])
+def test_fused_decode_matches_rung_across_backends(smoke_model, ring_model,
+                                                   backend, shards):
+    """ISSUE 6 acceptance: decode_kernel='fused' serves bit-identical
+    greedy tokens to the per-rung path on every backend under a MIXED
+    ladder, with decode running long enough to fill pages mid-stream (the
+    ladder re-ranks and the per-page plane map changes under the kernel)."""
+    model, params = (ring_model if backend == "ring" else smoke_model)
+    ladder = (PrecisionLadder([(1, 16), (-1, 4)]) if backend == "ring"
+              else LADDER)
+
+    def run(kernel):
+        kw = dict(device_kv="bitplane", ladder=ladder, decode_kernel=kernel)
+        cfg = (_cfg(backend, shards, **kw) if backend != "ring" else
+               EngineConfig(max_batch=2, max_ctx=96, backend="ring",
+                            store_layers=2, **kw))
+        _, reqs = _serve(model, params, cfg, [_prompt(80), _prompt(37, 5)],
+                         max_new=20)
+        return [r.output for r in reqs]
+
+    assert run("fused") == run("rung")
+
+
+def test_fused_compile_count_one_per_model_config():
+    """ISSUE 6 satellite: under a 64-request trace whose ladder re-ranks
+    across every rung, the fused path traces exactly ONE Pallas decode
+    kernel for the whole run; the rung path traces one per member of the
+    static rung set.  (Kernel bodies bump ``TRACE_COUNTS`` at trace time,
+    so a re-trace anywhere in the trace would show up here.)"""
+    from repro.kernels.paged_attention import kernel as K
+
+    mcfg = get_config("smollm-135m", smoke=True)
+    params = build_model(mcfg).init(jax.random.PRNGKey(0))
+    for kernel in ("fused", "rung"):
+        model = build_model(mcfg)  # fresh object -> fresh scheduler jits
+        K.paged_attention_fused.clear_cache()
+        K.paged_attention_rung.clear_cache()
+        K.TRACE_COUNTS["fused"] = K.TRACE_COUNTS["rung"] = 0
+        sched = ContinuousScheduler(
+            model, params,
+            EngineConfig(max_batch=8, max_ctx=192, store_layers=1,
+                         device_kv="bitplane", ladder=LADDER,
+                         decode_kernel=kernel))
+        for i in range(64):
+            sched.submit(Request(rid=i, prompt=_prompt(17 + (i % 5) * 13, i),
+                                 max_new_tokens=4))
+        sched.run_until_drained()
+        keeps = sched.backend.device_keeps()
+        assert len(keeps) > 1, "mixed ladder must produce a multi-rung set"
+        want_rung = len(keeps) if kernel == "rung" else 0
+        assert K.TRACE_COUNTS["fused"] == (1 if kernel == "fused" else 0), (
+            kernel, dict(K.TRACE_COUNTS))
+        assert K.TRACE_COUNTS["rung"] == want_rung, (
+            kernel, dict(K.TRACE_COUNTS))
+
+
+# ---------------------------------------------------------------------------
+# Staged decode under continuous batching (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_staged_decode_matches_unstaged(smoke_model):
+    """decode_staging > 0 on the paged backend (device_kv='dense') serves
+    greedy tokens identical to the unstaged cache — across prefill joins at
+    four different anchors, multiple flushed staging windows per row, and
+    page-fill store writes that span the main-cache/staging-ring boundary.
+
+    (The staged path merges two attention partials where the plain path
+    sums once; the orders agree to the last ulp, so — as in
+    ``test_staged_decode_cache_matches_plain`` — an exact bf16 logit tie
+    could flip argmax without a real defect.  This trace has no such tie.)
+    """
+    model, params = smoke_model
+    cfg_st = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                                 decode_staging=4)
+    model_st = build_model(cfg_st)
+    prompts = [_prompt(20), _prompt(27, 1), _prompt(34, 2), _prompt(41, 3)]
+    kw = dict(device_kv="dense", ladder=LADDER)
+    _, staged = _serve(model_st, params, _cfg("paged", 1, **kw), prompts,
+                       max_new=12)
+    _, ref = _serve(model, params, _cfg("paged", 1, **kw), prompts,
+                    max_new=12)
+    assert [r.output for r in staged] == [r.output for r in ref]
+
+
+def test_staged_decode_unsupported_combinations_raise():
+    """The PR-4 blanket raise is gone: staged decode works on paged/dense,
+    and every other combination names itself in a precise ValueError."""
+    base = get_config("smollm-135m", smoke=True)
+    model_st = build_model(dataclasses.replace(base, decode_staging=4))
+    with pytest.raises(ValueError, match="device_kv='dense'"):
+        make_backend(model_st, _cfg("paged", 1, device_kv="bitplane"))
+    with pytest.raises(ValueError, match="sharded"):
+        make_backend(model_st, _cfg("sharded", 2, device_kv="dense"))
+    model_ring = build_model(dataclasses.replace(base, attn_window=32,
+                                                 decode_staging=4))
+    with pytest.raises(ValueError, match="ring"):
+        make_backend(model_ring, EngineConfig(max_batch=2, max_ctx=96,
+                                              backend="ring"))
+
+
 def test_bitplane_rejects_unpackable_head_dim(smoke_model):
     cfg_bad = dataclasses.replace(get_config("smollm-135m", smoke=True),
                                   head_dim=12, n_heads=4, n_kv_heads=2)
