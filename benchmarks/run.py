@@ -43,8 +43,11 @@ MODULES = [
     ("serving_bitplane", "benchmarks.serving_bitplane",
      {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
       "smoke": dict(n_requests=4, rate=0.8, max_steps=80),
-      # bandwidth-campaign artifact, written next to the --json output
-      "artifact": "BENCH_serving.json"}),
+      # campaign artifacts, written next to the --json output: the module
+      # receives json_path for the FIRST entry; the rest are companions it
+      # derives from it (here: the Perfetto trace of the last
+      # bitplane/fused run, ISSUE 7)
+      "artifact": ["BENCH_serving.json", "BENCH_serving_trace.json"]}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]
@@ -60,6 +63,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     results, failures = {}, []
+    artifacts: dict = {}
     for name, modpath, opts in MODULES:
         if args.only and name not in args.only:
             continue
@@ -71,11 +75,17 @@ def main(argv=None) -> int:
             kwargs = opts.get("fast", {})
         else:
             kwargs = opts.get("full", {})
+        expected: list = []
         if args.json and "artifact" in opts:
-            # campaign modules also write a standalone artifact file (the
-            # CI job uploads it) into the --json output's directory
-            kwargs = dict(kwargs, json_path=os.path.join(
-                os.path.dirname(args.json) or ".", opts["artifact"]))
+            # campaign modules also write standalone artifact files (the
+            # CI job uploads them) into the --json output's directory; the
+            # module receives json_path for the first name, companions
+            # (e.g. the Perfetto trace) are derived from it
+            arts = opts["artifact"]
+            arts = [arts] if isinstance(arts, str) else list(arts)
+            outdir = os.path.dirname(args.json) or "."
+            expected = [os.path.join(outdir, a) for a in arts]
+            kwargs = dict(kwargs, json_path=expected[0])
         t0 = time.time()
         try:
             mod = __import__(modpath, fromlist=["run"])
@@ -85,10 +95,18 @@ def main(argv=None) -> int:
             failures.append((name, repr(e)))
             traceback.print_exc()
             print(f"[bench] {name} FAILED: {e}")
+        written = [p for p in expected if os.path.exists(p)]
+        if written:
+            artifacts[name] = written
+            for p in written:
+                print(f"[bench] {name} artifact: {p}")
+    n_ran = len(results)
     if args.json:
+        if artifacts:
+            results["_artifacts"] = artifacts
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1, default=str)
-    print(f"\n[bench] {len(results)} benchmarks ran, {len(failures)} failures")
+    print(f"\n[bench] {n_ran} benchmarks ran, {len(failures)} failures")
     for f_ in failures:
         print("  FAIL", f_)
     return 1 if failures else 0

@@ -78,7 +78,21 @@ def _run(model, params, cfg, reqs, arrivals, max_steps=None):
             sched.submit(reqs[nxt])
             nxt += 1
         sched.step()
-    return sched.report()
+    return sched.report(), sched
+
+
+def _span_latency(rep: dict) -> dict:
+    """p50/p99 TTFT + per-token latency from the telemetry spans, in both
+    clock domains — the per-request numbers the aggregate report can't
+    give (ISSUE 7 satellite)."""
+    lat = rep.get("latency", {})
+    out = {}
+    for key in ("ttft_wall_ns", "ttft_engine_ns",
+                "tpot_wall_ns", "tpot_engine_ns"):
+        q = lat.get(key, {})
+        out[key + "_p50"] = q.get("p50", 0.0)
+        out[key + "_p99"] = q.get("p99", 0.0)
+    return out
 
 
 def _peak_device_bytes_per_s(engine) -> float:
@@ -96,12 +110,16 @@ def run(n_requests: int = 16, rate: float = 0.6, seed: int = 0,
     from repro.configs.base import get_config
     from repro.core.quantization import PrecisionLadder
     from repro.models.model import build_model
-    from repro.serving import EngineConfig
+    from repro.serving import EngineConfig, TelemetryConfig
 
     cfg_m = get_config("smollm-135m", smoke=True)
     model = build_model(cfg_m)
     params = model.init(jax.random.PRNGKey(0))
-    base = EngineConfig(max_batch=4, max_ctx=256, store_layers=2)
+    # telemetry on for every measured run: the campaign's TTFT/TPOT
+    # quantiles come from request spans, and the last bitplane/fused run's
+    # Perfetto trace ships as a CI artifact next to the JSON
+    base = EngineConfig(max_batch=4, max_ctx=256, store_layers=2,
+                        telemetry=TelemetryConfig())
     peak = _peak_device_bytes_per_s(base.engine)
     mixes = [
         ("full (16)", None),
@@ -115,14 +133,17 @@ def run(n_requests: int = 16, rate: float = 0.6, seed: int = 0,
 
     out = {}
     rows = []
+    last_sched = None
     for mix_name, ladder in mixes:
         for device_kv, kernel in variants:
             cfg = dataclasses.replace(base, ladder=ladder,
                                       device_kv=device_kv,
                                       decode_kernel=kernel)
-            rep = _run(model, params, cfg,
-                       _mixed_requests(n_requests, seed, cfg_m.vocab),
-                       arrivals, max_steps=max_steps)
+            rep, sched = _run(model, params, cfg,
+                              _mixed_requests(n_requests, seed, cfg_m.vocab),
+                              arrivals, max_steps=max_steps)
+            if device_kv == "bitplane" and kernel == "fused":
+                last_sched = sched
             if device_kv == "bitplane":
                 # the acceptance identity, demonstrated at every mix and
                 # on BOTH kernel strategies
@@ -145,6 +166,7 @@ def run(n_requests: int = 16, rate: float = 0.6, seed: int = 0,
                 "device_bandwidth_saving":
                     rep.get("kv_device_bandwidth_saving", 0),
                 "roofline_fraction": tok_s * bpt / peak,
+                **_span_latency(rep),
             }
     print(fmt_table(rows, ["ladder mix", "device path", "tok/s",
                            "device B/tok", "accounted B/tok",
@@ -168,6 +190,13 @@ def run(n_requests: int = 16, rate: float = 0.6, seed: int = 0,
         with open(json_path, "w") as fh:
             json.dump(out, fh, indent=1)
         print(f"[serving_bitplane] wrote {json_path}")
+        if last_sched is not None and last_sched.telemetry.enabled:
+            from repro.telemetry import write_perfetto_trace
+
+            trace_path = str(json_path).replace(".json", "") + "_trace.json"
+            write_perfetto_trace(last_sched.telemetry, trace_path,
+                                 clock_ghz=base.engine.clock_ghz)
+            print(f"[serving_bitplane] wrote {trace_path} (Perfetto)")
     print("[serving_bitplane] dense device bytes ignore the ladder "
           "(accounting fiction); bitplane device bytes == the controller's "
           "plane-scaled kv_read — and the fused single-kernel walk turns "

@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""Schema-validate a Perfetto/Chrome trace JSON (CI artifact gate).
+
+    PYTHONPATH=src python scripts/validate_trace.py trace.json [more.json ...]
+
+Runs :func:`repro.telemetry.validate_trace` on each file: every event must
+carry a known phase, integer pid/tid, numeric non-negative timestamps,
+non-negative "X" durations and numeric counter args, and the trace must
+contain the per-slot request tracks the serving exporter emits.  Exit 0
+with a per-file summary on success; exit 1 naming the first offending
+event otherwise — the same check the unit tests run, so a trace that
+passes here loads in ui.perfetto.dev / chrome://tracing.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main(argv: list | None = None) -> int:
+    from repro.telemetry import validate_trace
+
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print(__doc__)
+        return 2
+    bad = 0
+    for path in paths:
+        try:
+            summary = validate_trace(path)
+        except (ValueError, OSError, Exception) as e:  # noqa: BLE001
+            print(f"[validate_trace] {path}: FAIL — {e}")
+            bad += 1
+            continue
+        phases = " ".join(f"{k}={v}" for k, v in sorted(summary["phases"].items()))
+        print(f"[validate_trace] {path}: OK — {summary['events']} events, "
+              f"{summary['tracks']} tracks ({phases}), "
+              f"lane_track={summary['has_lane_track']}, "
+              f"counters={summary['has_counters']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

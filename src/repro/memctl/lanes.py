@@ -59,10 +59,16 @@ class MemCtlConfig:
 
 
 class LanePool:
-    """Earliest-free-lane block scheduler with per-lane busy accounting."""
+    """Earliest-free-lane block scheduler with per-lane busy accounting.
 
-    def __init__(self, cfg: MemCtlConfig):
+    ``on_block(tier, lane, start_cycle, end_cycle, nbytes)`` — when set —
+    is invoked once per scheduled block chunk; the telemetry layer uses it
+    to build per-lane busy timelines for the Perfetto export."""
+
+    def __init__(self, cfg: MemCtlConfig, on_block=None, tier: int = 0):
         self.cfg = cfg
+        self.on_block = on_block
+        self.tier = tier
         # frozen config -> constant; avoid rebuilding the hardware model
         # for every scheduled block
         self._bytes_per_cycle = cfg.lane_bytes_per_cycle
@@ -90,6 +96,8 @@ class LanePool:
             self.busy_cycles[lane] += cycles
             self.blocks_scheduled += 1
             done = max(done, self._free_at[lane])
+            if self.on_block is not None:
+                self.on_block(self.tier, lane, start, start + cycles, chunk)
         return done
 
     def drain_cycle(self) -> int:

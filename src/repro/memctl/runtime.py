@@ -23,18 +23,33 @@ import math
 from repro.memctl.clock import EngineClock
 from repro.memctl.lanes import LanePool, MemCtlConfig
 from repro.memctl.queue import Job, JobClass, PriorityJobQueue
-from repro.memctl.stats import EngineStats
+from repro.memctl.stats import EngineStats, _percentile
+from repro.telemetry.collector import NULL_COLLECTOR
 
 
 class CompressionEngineRuntime:
-    """Priority queue + lane pool + step clock, one tick per scheduler step."""
+    """Priority queue + lane pool + step clock, one tick per scheduler step.
 
-    def __init__(self, cfg: MemCtlConfig | None = None):
+    ``telemetry`` (a :mod:`repro.telemetry` collector) records one
+    structured event per tick (serviced bytes, queue depth, deferrals) and
+    — through the lane pool — per-lane busy intervals, keyed by ``tier``
+    (the owning shard's index).  The default null collector keeps every
+    site a single-branch no-op."""
+
+    def __init__(self, cfg: MemCtlConfig | None = None,
+                 telemetry=None, tier: int = 0):
         self.cfg = cfg or MemCtlConfig()
         if self.cfg.step_cycles is not None and self.cfg.step_cycles < 1:
             raise ValueError("step_cycles must be >= 1 (or None for unbounded)")
+        self.telemetry = telemetry if telemetry is not None else NULL_COLLECTOR
+        self.tier = tier
         self.clock = EngineClock(self.cfg.clock_ghz, self.cfg.step_cycles)
-        self.lanes = LanePool(self.cfg)
+        self.lanes = LanePool(
+            self.cfg,
+            on_block=(self.telemetry.on_lane_block
+                      if self.telemetry.enabled else None),
+            tier=tier,
+        )
         self.queue = PriorityJobQueue()
         self.stats = EngineStats()
 
@@ -53,6 +68,8 @@ class CompressionEngineRuntime:
         compressed bytes out to the capacity tier.  Occupancy only — the
         controller charges no bus event for a drop; the re-compress is
         charged if the page ever returns."""
+        if self.telemetry.enabled:
+            self.telemetry.on_eviction(self.tier, int(stored_bytes))
         return self.submit(Job(JobClass.BACKGROUND, stored_bytes,
                                fn=None, key=("evict",) + tuple(key)
                                if isinstance(key, tuple) else ("evict", key),
@@ -127,14 +144,21 @@ class CompressionEngineRuntime:
         deferred = self.queue.mark_deferred()
         overhang = self.clock.step_overhang_cycles()
         self.stats.close_step(spent, len(self.queue), deferred, overhang)
-        self.clock.advance_step()
-        return {
+        summary = {
             "serviced_jobs": serviced,
             "serviced_bytes": spent,
             "deferred_jobs": deferred,
             "queue_depth": len(self.queue),
             "overhang_cycles": overhang,
         }
+        if self.telemetry.enabled:
+            self.telemetry.on_engine_step(self.tier, {
+                "step": self.stats.steps,
+                "window_start_cycle": self.clock.step_start,
+                **summary,
+            })
+        self.clock.advance_step()
+        return summary
 
     # -------------------------------------------------------------- reporting
     def report(self) -> dict:
@@ -159,6 +183,9 @@ class CompressionEngineRuntime:
             "mean_step_lag_ns": (self.clock.cycles_to_ns(
                 sum(lag_cycles) / len(lag_cycles)) if lag_cycles else 0.0),
             "silicon": self.cfg.silicon_cost(),
+            # raw per-step samples so sharded aggregation can pool depths
+            # across shards instead of max-ing pre-computed percentiles
+            "step_queue_depth": list(self.stats.step_queue_depth),
         })
         return r
 
@@ -168,14 +195,37 @@ def aggregate_engine_reports(reports: list) -> dict:
 
     Capacity-like quantities (serviced jobs/bytes, deferred work, lanes,
     budgets, silicon area/power) SUM across shards; latency-like quantities
-    (modeled latency, lag, queue depth) take the WORST shard — a request is
-    only as fast as its slowest shard's fetches; utilization averages
-    lane-weighted.  A single report passes through unchanged upstream (the
-    caller skips aggregation for one tier), so paged numbers are untouched.
+    (modeled latency, lag) take the WORST shard — a request is only as fast
+    as its slowest shard's fetches; utilization averages lane-weighted.
+    Queue depth is pooled: per-step depths are summed across shards (the
+    fleet's total backlog at each step) and the percentiles re-computed over
+    the pooled series, so the aggregate p99 reflects simultaneous backlog
+    instead of max-ing each shard's independently-computed percentiles
+    (which both overstates skewed-load fleets and loses the fleet total).
+    Reports without raw ``step_queue_depth`` samples fall back to the old
+    max-of-percentiles.  A single report passes through unchanged upstream
+    (the caller skips aggregation for one tier), so paged numbers are
+    untouched.
     """
     assert reports, "aggregate_engine_reports needs at least one report"
     classes = reports[0]["serviced_jobs"].keys()
     lanes = sum(r["lanes"] for r in reports)
+    samples = [r.get("step_queue_depth") for r in reports]
+    if all(isinstance(s, list) for s in samples):
+        n_steps = max((len(s) for s in samples), default=0)
+        pooled = [sum(s[i] if i < len(s) else 0 for s in samples)
+                  for i in range(n_steps)]
+        depths = sorted(pooled)
+        queue_depth = {
+            "p50": _percentile(depths, 0.50),
+            "p90": _percentile(depths, 0.90),
+            "p99": _percentile(depths, 0.99),
+            "max": float(depths[-1]) if depths else 0.0,
+        }
+    else:
+        pooled = None
+        queue_depth = {q: max(r["queue_depth"][q] for r in reports)
+                       for q in reports[0]["queue_depth"]}
     budgets = [r["step_budget_bytes"] for r in reports]
     silicon: dict = {}
     for r in reports:
@@ -195,8 +245,8 @@ def aggregate_engine_reports(reports: list) -> dict:
         "steps": max(r["steps"] for r in reports),
         "peak_step_serviced_bytes": max(r["peak_step_serviced_bytes"]
                                         for r in reports),
-        "queue_depth": {q: max(r["queue_depth"][q] for r in reports)
-                        for q in reports[0]["queue_depth"]},
+        "queue_depth": queue_depth,
+        "step_queue_depth": pooled,
         "lanes": lanes,
         "clock_ghz": reports[0]["clock_ghz"],
         "block_bits": reports[0]["block_bits"],

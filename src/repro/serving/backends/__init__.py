@@ -21,7 +21,8 @@ __all__ = [
 ]
 
 
-def make_backend(model, cfg, controller=None, stats=None) -> KVBackend:
+def make_backend(model, cfg, controller=None, stats=None,
+                 telemetry=None) -> KVBackend:
     """Build the memory-tier backend ``cfg.backend`` names."""
     try:
         cls = BACKENDS[cfg.backend]
@@ -30,4 +31,5 @@ def make_backend(model, cfg, controller=None, stats=None) -> KVBackend:
             f"unknown KV backend {cfg.backend!r}; available: "
             f"{sorted(BACKENDS)}"
         ) from None
-    return cls(model, cfg, controller=controller, stats=stats)
+    return cls(model, cfg, controller=controller, stats=stats,
+               telemetry=telemetry)

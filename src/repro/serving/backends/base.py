@@ -70,6 +70,7 @@ from repro.serving.kv_cache import (
     PageKey,
     iter_page_chunks,
 )
+from repro.telemetry.collector import NULL_COLLECTOR
 
 #: stat keys the backend mutates on the (shared) scheduler stats dict
 BACKEND_STATS = (
@@ -111,7 +112,8 @@ class MemTier:
     included), so a one-tier backend is bit-exact with it."""
 
     def __init__(self, cfg, controller: MemoryController | None = None,
-                 max_stored_bytes: int | None = None, index: int = 0):
+                 max_stored_bytes: int | None = None, index: int = 0,
+                 telemetry=None):
         self.index = index
         codec = cfg.codec or default_codec()
         store_cfg = StoreConfig(codec=codec)
@@ -137,7 +139,8 @@ class MemTier:
             mc = dataclasses.replace(
                 mc, engine=codec if codec in ("lz4", "zstd") else "lz4"
             )
-        self.engine = CompressionEngineRuntime(mc)
+        self.engine = CompressionEngineRuntime(mc, telemetry=telemetry,
+                                               tier=index)
         controller.attach_engine_clock(self.engine.clock)
         self.controller = controller
         self.store = CompressedKVStore(
@@ -147,7 +150,8 @@ class MemTier:
 
 
 def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
-                   key: PageKey, seq_key, device_kv: str = "dense") -> Job:
+                   key: PageKey, seq_key, device_kv: str = "dense",
+                   telemetry=None) -> Job:
     """Decode-critical fetch with SERVICE-TIME sizing.
 
     The plane count is resolved exactly once — by ``size_fn`` when the
@@ -161,8 +165,15 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
     reads exactly the planes the ladder prescribes (the engine-job bytes);
     a dense cache reads the full-precision page no matter what the ladder
     charged — the accounting-vs-device gap the bit-plane layout closes.
+
+    With a live ``telemetry`` collector, every serviced fetch is attributed
+    to its request (``key.seq_id``) in BOTH byte currencies: the device
+    bytes above (sums to the backend's ``device_bytes_read``) and the
+    controller's plane-scaled kv_read delta (sums to the controller
+    totals) — the per-request breakdown of the two bandwidth claims.
     """
     plan: dict = {}
+    telemetry = telemetry if telemetry is not None else NULL_COLLECTOR
 
     def size() -> int:
         if not store.contains(key):
@@ -178,6 +189,9 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
         if "keep" not in plan:
             stats["kv_fetch_misses"] += 1
             return
+        live = telemetry.enabled
+        before = (store.controller.stats.kind_device_bytes("kv_read")
+                  if live else 0)
         try:
             store.account_fetch(key, keep_planes=plan["keep"])
         except PageEvictedError:
@@ -188,6 +202,10 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
         stats["device_bytes_read"] = (
             stats.get("device_bytes_read", 0) + plan["device"]
         )
+        if live:
+            delta = (store.controller.stats.kind_device_bytes("kv_read")
+                     - before)
+            telemetry.on_fetch(key.seq_id, plan["device"], delta)
 
     return Job(JobClass.DECODE_FETCH, 0, fn=fn, key=key.astuple(),
                seq_id=seq_key, size_fn=size)
@@ -202,7 +220,7 @@ class KVBackend(abc.ABC):
     name = "?"
 
     def __init__(self, model, cfg, controller: MemoryController | None = None,
-                 stats: Dict[str, float] | None = None):
+                 stats: Dict[str, float] | None = None, telemetry=None):
         self.model = model
         self.mcfg = model.cfg
         self.cfg = cfg
@@ -211,6 +229,7 @@ class KVBackend(abc.ABC):
         self.stats = stats if stats is not None else {}
         for key in BACKEND_STATS:
             self.stats.setdefault(key, 0)
+        self.telemetry = telemetry if telemetry is not None else NULL_COLLECTOR
         self.tiers: List[MemTier] = self._build_tiers(controller)
         self._cache = None
         self._slots: Dict[int, SlotState] = {}
@@ -253,7 +272,8 @@ class KVBackend(abc.ABC):
 
     # ----------------------------------------------------------------- tiers
     def _build_tiers(self, controller) -> List[MemTier]:
-        return [MemTier(self.cfg, controller, self.cfg.max_stored_bytes)]
+        return [MemTier(self.cfg, controller, self.cfg.max_stored_bytes,
+                        telemetry=self.telemetry)]
 
     def _seq_key(self, tier: MemTier, rid: int):
         """Cancellation scope for jobs of request ``rid`` on ``tier``
@@ -553,6 +573,7 @@ class KVBackend(abc.ABC):
                                 tier.store, self.stats, key,
                                 self._seq_key(tier, rid),
                                 device_kv=self.device_kv,
+                                telemetry=self.telemetry,
                             ))
                         elif (tier.engine.pending(kt, JobClass.KV_WRITE)
                               or tier.engine.pending(kt, JobClass.BACKGROUND)):
@@ -649,6 +670,8 @@ class KVBackend(abc.ABC):
         self._cache["planes"] = self._cache["planes"].at[slot_id].set(
             jnp.asarray(row)
         )
+        if self.telemetry.enabled:  # only actual device writes, not re-syncs
+            self.telemetry.on_plane_push(st.rid, slot_id)
 
     def _assign_ladder_planes(self, slot_id: int, ln: int) -> None:
         """Re-rank this slot's live full pages against the newest query
@@ -687,6 +710,8 @@ class KVBackend(abc.ABC):
                     key = PageKey(st.rid, li, p, stream)
                     for tier, _cols in self._page_targets(key):
                         tier.store.set_planes(key, keep)
+        if self.telemetry.enabled:
+            self.telemetry.on_ladder_rerank(st.rid, n_pages - p0)
         self._push_device_planes(slot_id, st)
 
     # ---------------------------------------------------------------- engine
@@ -703,6 +728,12 @@ class KVBackend(abc.ABC):
         """Worst tier's engine-limited latency right now — the admission
         backpressure signal (`EngineConfig.admit_latency_ns_max`)."""
         return max(tier.engine.pressure_ns() for tier in self.tiers)
+
+    def engine_time_ns(self) -> float:
+        """Current modeled engine-clock time: the worst tier's serviced-work
+        watermark (monotone — a request's fetches are only as done as the
+        slowest shard's).  The telemetry collector's second clock domain."""
+        return max(tier.engine.clock.elapsed_ns for tier in self.tiers)
 
     # ------------------------------------------------------------- reporting
     def note_peaks(self) -> None:

@@ -52,9 +52,10 @@ class ShardedBackend(KVBackend):
         super().check_model(mcfg, cfg)
 
     def __init__(self, model, cfg, controller: MemoryController | None = None,
-                 stats=None):
+                 stats=None, telemetry=None):
         self.shards = max(1, int(cfg.shards))
-        super().__init__(model, cfg, controller=controller, stats=stats)
+        super().__init__(model, cfg, controller=controller, stats=stats,
+                         telemetry=telemetry)
         self._route, self._cols = self._plan_route(model, cfg)
 
     # ----------------------------------------------------------------- tiers
@@ -68,7 +69,8 @@ class ShardedBackend(KVBackend):
         budget = self.cfg.max_stored_bytes
         per = None if budget is None else max(1, budget // self.shards)
         return [
-            MemTier(self.cfg, controller if s == 0 else None, per, index=s)
+            MemTier(self.cfg, controller if s == 0 else None, per, index=s,
+                    telemetry=self.telemetry)
             for s in range(self.shards)
         ]
 

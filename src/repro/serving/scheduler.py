@@ -83,6 +83,7 @@ from repro.models.model import Model
 from repro.serving.backends import make_backend
 from repro.serving.kv_cache import PAGE_TOKENS
 from repro.serving.sampler import SamplerConfig, sample, sample_slots
+from repro.telemetry.collector import TelemetryConfig, make_collector
 
 
 @dataclasses.dataclass
@@ -179,6 +180,12 @@ class EngineConfig:
     #: this many ns (None = admit regardless, the pre-backpressure
     #: behaviour)
     admit_latency_ns_max: Optional[float] = None
+    #: serving telemetry (ISSUE 7): request-lifecycle spans, per-step
+    #: structured events, memctl lane timelines, and the
+    #: Perfetto/Prometheus exporters they feed.  None (the default) wires
+    #: the no-op null collector — every instrumentation site pays one
+    #: branch and the serving output stays bit-identical.
+    telemetry: Optional[TelemetryConfig] = None
 
 
 @dataclasses.dataclass
@@ -304,8 +311,15 @@ class ContinuousScheduler:
         }
         # the memory tier: store(s) + controller(s) + lane engine(s) live
         # behind the protocol; the backend mutates the shared stats dict
+        self.telemetry = make_collector(cfg.telemetry)
         self.backend = make_backend(model, cfg, controller=controller,
-                                    stats=self.stats)
+                                    stats=self.stats,
+                                    telemetry=self.telemetry)
+        if self.telemetry.enabled:
+            # both readers are monotone, so span stamps are monotone in
+            # both clock domains (the lifecycle invariant tests pin)
+            self.telemetry.bind_clocks(lambda: self.step_count,
+                                       self.backend.engine_time_ns)
         self._prefill, self._decode, self._prefill_chunk = _jitted(
             model, self.backend.device_keeps(), cfg.decode_kernel
         )
@@ -357,6 +371,8 @@ class ContinuousScheduler:
         req.arrival_step = self.step_count
         self._waiting.append(req)
         self.stats["requests_submitted"] += 1
+        if self.telemetry.enabled:
+            self.telemetry.on_submit(req.rid, len(req.prompt))
 
     @property
     def active(self) -> int:
@@ -403,6 +419,7 @@ class ContinuousScheduler:
         if self.decoding == 0:
             self._flush_prefill_progress(progressed)
             self.backend.tick()   # engine windows track wall steps
+            self._note_step()
             self.step_count += 1  # idle tick: arrival traces keyed on
             return []             # step_count must still advance time
         pending_decode = self._decode_dispatch()
@@ -411,8 +428,19 @@ class ContinuousScheduler:
         self.backend.tick()
         if self.cfg.store_kv_compressed:
             self.backend.note_peaks()
+        self._note_step()
         self.step_count += 1
         return self._retire_finished()
+
+    def _note_step(self) -> None:
+        """One structured telemetry record per scheduler step: occupancy,
+        waiting queue, engine backlog (the Perfetto counter tracks)."""
+        if self.telemetry.enabled:
+            self.telemetry.on_step({
+                "active": self.active, "decoding": self.decoding,
+                "waiting": len(self._waiting),
+                "backlog": self.backend.backlog(),
+            })
 
     def _flush_prefill_progress(self, progressed) -> None:
         """Hand this step's completed prompt spans to the backend (page
@@ -467,6 +495,8 @@ class ContinuousScheduler:
         self._lens[slot_id] = 0
         self.backend.bind_slot(slot_id, req.rid)
         req.admit_step = self.step_count
+        if self.telemetry.enabled:
+            self.telemetry.on_admit(req.rid, slot_id)
         if self._mode == "padded":
             self._prefill_padded(slot_id)
 
@@ -527,9 +557,14 @@ class ContinuousScheduler:
         self._lens[slot_id] = slot.prefill_pos
         final = slot.prefill_pos >= len(slot.prompt)
         progressed.append((slot_id, slot.prefill_pos, final))
+        if self.telemetry.enabled:
+            self.telemetry.on_prefill_chunk(slot.req.rid, start,
+                                            slot.prefill_pos, final)
         if final:
             slot.prefilling = False
             slot.pending = self._first_token(slot, logits)
+            if self.telemetry.enabled:
+                self.telemetry.on_first_token(slot.req.rid)
 
     def _prefill_padded(self, slot_id: int) -> None:
         """Legacy admission: left-pad to ``prefill_align`` and run one
@@ -558,6 +593,9 @@ class ContinuousScheduler:
         slot.prefill_pos = s
         slot.prefilling = False
         slot.pending = self._first_token(slot, logits)
+        if self.telemetry.enabled:
+            self.telemetry.on_prefill_chunk(slot.req.rid, 0, s, True)
+            self.telemetry.on_first_token(slot.req.rid)
         self.backend.on_prefill_progress(slot_id, s, final=True)
 
     def _first_token(self, slot: _Slot, logits) -> int:
@@ -615,6 +653,8 @@ class ContinuousScheduler:
         n_dec = self.decoding
         self.stats["decode_steps"] += 1
         self.stats["decode_batch_occupancy"] += n_dec / b
+        live = self.telemetry.enabled
+        committed: List[tuple] = []
         for i, slot in enumerate(self._slots):
             if slot is None or slot.prefilling:
                 continue
@@ -623,7 +663,13 @@ class ContinuousScheduler:
             slot.draws += 1
             self._lens[i] += 1
             self.stats["decode_tokens"] += 1
+            if live:
+                committed.append((slot.req.rid, i))
             self.backend.on_decode_token(i, int(self._lens[i]))
+        if live and committed:
+            # one shared stamp for the whole batch — the tokens
+            # materialized together in one device step
+            self.telemetry.on_decode_commit(committed)
 
     # ----------------------------------------------------------------- retire
     def _retire_finished(self) -> List[Request]:
@@ -650,6 +696,9 @@ class ContinuousScheduler:
                 self._slots[i] = None
                 self._lens[i] = 0
                 self.stats["requests_completed"] += 1
+                if self.telemetry.enabled:
+                    self.telemetry.on_retire(r.rid, len(r.output),
+                                             r.truncated)
                 done.append(r)
         return done
 
@@ -676,5 +725,13 @@ class ContinuousScheduler:
                 "kv_fetch_logical": s["kv_fetch_logical"] * per,
                 "kv_evicted_bytes": s["kv_evicted_bytes"] * per,
                 "decode_tokens": s["decode_tokens"] * per,
+                "requests_truncated": s["requests_truncated"] * per,
+                "admits_deferred": s["admits_deferred"] * per,
             }
+        if self.telemetry.enabled:
+            # span-derived latency quantiles (both clock domains) + the
+            # collector's own bookkeeping — the Prometheus snapshot and
+            # the serving benchmark read these blocks
+            s["latency"] = self.telemetry.latency_report()
+            s["telemetry"] = self.telemetry.summary()
         return s
