@@ -4,7 +4,7 @@
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, pct
-from benchmarks.fig10_dram_energy import ACTIVE_FRAC, FETCH_FRAC, SCENARIOS, _trace
+from benchmarks.fig10_dram_energy import FETCH_FRAC, SCENARIOS, _trace
 from repro.memsim.trace import replay_controller_trace
 
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""repro-lint entry point (equivalent to ``python -m repro.analysis``).
+
+Usable without PYTHONPATH plumbing::
+
+    scripts/lint.py [paths...] [--rule NAME] [--format json|text]
+
+Exits nonzero when any finding survives suppression — the CI lint gate.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

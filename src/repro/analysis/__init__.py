@@ -1,0 +1,22 @@
+"""repro-lint: AST-based invariant checker for the serving/memctl/kernel
+stack (ISSUE 8).
+
+Run it as ``python -m repro.analysis`` (or ``scripts/lint.py``); use the
+API from tests::
+
+    from repro.analysis import check_source, run_paths
+    findings = run_paths(["src", "tests", "benchmarks"])
+
+Rules live in :mod:`repro.analysis.rules`; each carries a docstring the
+CLI prints as the violation's explanation.  Per-line suppression:
+``# repro-lint: disable=<rule>[,<rule>...]`` (or ``disable=all``) on the
+finding's line or the line above.
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    all_rules,
+    check_file,
+    check_source,
+    run_paths,
+)

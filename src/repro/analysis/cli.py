@@ -1,0 +1,101 @@
+"""repro-lint CLI: ``python -m repro.analysis [paths] [--rule R] ...``.
+
+Exit status: 0 when clean, 1 when findings survive suppression, 2 on
+usage errors.  Text output is one ``path:line:col: rule: message`` per
+finding, followed by each fired rule's docstring (the explanation the
+issue asks every rule to carry); ``--format=json`` emits the same as a
+machine-readable object.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.core import Finding, all_rules, run_paths
+
+#: analyzer scope when no paths are given (repo-root relative)
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "scripts", "examples")
+
+
+def _default_paths() -> List[str]:
+    return [p for p in DEFAULT_PATHS if Path(p).exists()]
+
+
+def _text_report(findings: List[Finding], out) -> None:
+    rules = all_rules()
+    for f in findings:
+        print(f"{f.location()}: {f.rule}: {f.message}", file=out)
+    if findings:
+        print(file=out)
+        print("rule explanations:", file=out)
+        for name in sorted({f.rule for f in findings}):
+            print(f"  {name}: {rules[name].explanation()}", file=out)
+        print(f"\n{len(findings)} finding(s). Suppress a deliberate "
+              f"violation with '# repro-lint: disable=<rule>'.", file=out)
+    else:
+        print("repro-lint: clean", file=out)
+
+
+def _json_report(findings: List[Finding], checked: List[str], out) -> None:
+    rules = all_rules()
+    payload = {
+        "findings": [f.to_dict() for f in findings],
+        "explanations": {
+            name: rules[name].explanation()
+            for name in sorted({f.rule for f in findings})
+        },
+        "paths": checked,
+        "count": len(findings),
+    }
+    json.dump(payload, out, indent=2)
+    out.write("\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: AST invariant checker for the "
+                    "serving/memctl/kernel stack",
+    )
+    parser.add_argument("paths", nargs="*",
+                        help=f"files/dirs to lint (default: "
+                             f"{' '.join(DEFAULT_PATHS)} where present)")
+    parser.add_argument("--rule", action="append", dest="rules",
+                        metavar="NAME",
+                        help="run only this rule (repeatable)")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for name in sorted(rules):
+            print(f"{name}\n    {rules[name].explanation()}")
+        return 0
+
+    paths = args.paths or _default_paths()
+    if not paths:
+        print("repro-lint: no paths to lint (run from the repo root or "
+              "pass paths)", file=sys.stderr)
+        return 2
+    try:
+        findings = run_paths(paths, args.rules)
+    except KeyError as e:
+        print(f"repro-lint: {e.args[0]}", file=sys.stderr)
+        return 2
+    except SyntaxError as e:
+        print(f"repro-lint: cannot parse {e.filename}:{e.lineno}: "
+              f"{e.msg}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        _json_report(findings, [str(p) for p in paths], sys.stdout)
+    else:
+        _text_report(findings, sys.stdout)
+    return 1 if findings else 0

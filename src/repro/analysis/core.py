@@ -1,0 +1,194 @@
+"""repro-lint core: file model, rule registry, suppressions, runner.
+
+The serving/memctl/kernel stack carries structural invariants the runtime
+conformance suite can only sample (the scheduler never touches the store,
+every compressed byte is charged through a lane-engine job, telemetry
+stays branch-gated, Pallas kernels stay trace-safe).  This package checks
+them *statically*: each :class:`Rule` walks a stdlib-``ast`` tree and
+reports :class:`Finding`\\ s; the CLI (``python -m repro.analysis``) exits
+nonzero when any survive suppression.
+
+Suppression is per line::
+
+    codec.compress(blob)  # repro-lint: disable=accounting-taint
+
+The directive may sit on the finding's own line or the line directly
+above it (for statements that wrap).  ``disable=all`` silences every
+rule on that line.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file:line."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Module:
+    """A parsed source file plus the lookups every rule wants: normalized
+    posix path, source lines, a child->parent node map, and the per-line
+    suppression table."""
+
+    def __init__(self, source: str, path: str):
+        self.source = source
+        self.path = path.replace("\\", "/")
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self._parents: Dict[int, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[id(child)] = parent
+        self.suppressions: Dict[int, set] = {}
+        for lineno, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                self.suppressions[lineno] = {
+                    part.strip() for part in m.group(1).split(",") if part.strip()
+                }
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(id(node))
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def suppressed(self, finding: Finding) -> bool:
+        for line in (finding.line, finding.line - 1):
+            rules = self.suppressions.get(line)
+            if rules and ("all" in rules or finding.rule in rules):
+                return True
+        return False
+
+
+def attr_chain(node: ast.AST) -> List[str]:
+    """Dotted-name chain of an attribute expression, root first:
+    ``self.telemetry.on_fetch`` -> ``['self', 'telemetry', 'on_fetch']``.
+    Non-name roots (calls, subscripts) contribute an opaque ``'?'``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        parts.append("?")
+    return list(reversed(parts))
+
+
+def call_chain(call: ast.Call) -> List[str]:
+    return attr_chain(call.func)
+
+
+class Rule:
+    """Base class: subclasses set ``name``, a docstring (printed by the CLI
+    as the violation's explanation), ``applies(path)`` and ``check``."""
+
+    name: str = ""
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def explanation(self) -> str:
+        doc = (self.__doc__ or "").strip()
+        return " ".join(doc.split())
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    inst = cls()
+    assert inst.name and inst.name not in REGISTRY, cls
+    REGISTRY[inst.name] = inst
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    # rule modules self-register on import; import here to avoid a cycle
+    from repro.analysis import rules  # noqa: F401
+
+    return dict(REGISTRY)
+
+
+def _select(rule_names: Optional[Sequence[str]]) -> List[Rule]:
+    rules = all_rules()
+    if not rule_names:
+        return list(rules.values())
+    missing = [n for n in rule_names if n not in rules]
+    if missing:
+        raise KeyError(
+            f"unknown rule(s) {missing}; available: {sorted(rules)}"
+        )
+    return [rules[n] for n in rule_names]
+
+
+def check_source(source: str, path: str = "<fixture>.py",
+                 rule_names: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one source string as if it lived at ``path`` (the path decides
+    which rules fire — fixtures pass e.g. ``src/repro/serving/scheduler.py``).
+    Returns surviving (unsuppressed) findings."""
+    mod = Module(source, path)
+    out: List[Finding] = []
+    for rule in _select(rule_names):
+        if not rule.applies(mod.path):
+            continue
+        for f in rule.check(mod):
+            if not mod.suppressed(f):
+                out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def check_file(path, rule_names: Optional[Sequence[str]] = None) -> List[Finding]:
+    p = Path(path)
+    return check_source(p.read_text(), str(p), rule_names)
+
+
+def iter_py_files(paths: Iterable) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def run_paths(paths: Iterable,
+              rule_names: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` under the given files/directories."""
+    out: List[Finding] = []
+    for f in iter_py_files(paths):
+        out.extend(check_file(f, rule_names))
+    return out

@@ -1,0 +1,10 @@
+"""Rule modules self-register into :data:`repro.analysis.core.REGISTRY`
+on import; importing this package loads the whole catalog."""
+
+from repro.analysis.rules import (  # noqa: F401
+    accounting,
+    kernel_safety,
+    layering,
+    mechanical,
+    telemetry_gate,
+)

@@ -1,0 +1,80 @@
+"""Accounting-taint rule: every compressed byte is charged through memctl.
+
+The paper's bandwidth/footprint numbers only mean something if the modeled
+lane engine services every (de)compression and the controller logs every
+bus event.  Code that calls a codec directly, or reaches into
+``ControllerStats`` from outside the accounting core, moves bytes the
+report never sees.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, Rule, attr_chain, register
+
+#: modules allowed to touch codecs / controller stats directly: the codec
+#: registry itself, the page store and controller that do the charging,
+#: the lane-engine runtime, and the offline hardware model
+_ALLOWED = (
+    "repro/compression/",
+    "repro/core/compressed_store.py",
+    "repro/core/controller.py",
+    "repro/memctl/",
+    "repro/memsim/",
+)
+#: ControllerStats/EngineStats mutators — calling one outside the
+#: accounting core forges byte totals
+_STATS_MUTATORS = {"log", "note_serviced", "close_step"}
+
+
+@register
+class AccountingTaint(Rule):
+    """(De)compression and controller-stats mutation are memctl-internal:
+    serving code must submit lane-engine jobs (whose completion callbacks
+    do the charging) instead of calling ``codec.compress``/``decompress``
+    inline or poking ``ControllerStats`` — otherwise the byte totals the
+    paper's savings are quoted over silently drift from the bytes moved."""
+
+    name = "accounting-taint"
+
+    def applies(self, path: str) -> bool:
+        return not any(allow in path for allow in _ALLOWED)
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Attribute):
+                chain = attr_chain(node.func)
+                if node.func.attr in ("compress", "decompress"):
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"direct codec call "
+                        f"{'.'.join(chain)}() — bytes must be charged via "
+                        f"a memctl engine job",
+                    )
+                elif (node.func.attr in _STATS_MUTATORS and len(chain) >= 3
+                        and chain[-2] == "stats"):
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"stats mutator {'.'.join(chain)}() outside the "
+                        f"accounting core",
+                    )
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if not isinstance(tgt, ast.Attribute):
+                        continue
+                    chain = attr_chain(tgt)
+                    # 'stats' as an intermediate link = writing a field OF
+                    # a stats object (x.stats.foo = ...); binding x.stats
+                    # itself is construction and stays legal
+                    if "stats" in chain[1:-1]:
+                        yield Finding(
+                            self.name, mod.path, tgt.lineno, tgt.col_offset,
+                            f"direct stats-field write "
+                            f"{'.'.join(chain)} — counters are owned by "
+                            f"the controller/engine",
+                        )

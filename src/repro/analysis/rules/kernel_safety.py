@@ -1,0 +1,271 @@
+"""Pallas kernel tracing-safety rules (``kernels/**/kernel.py``).
+
+A Pallas kernel body runs once at trace time; anything that branches on a
+traced ref, touches host state, or indexes past the packed plane range is
+either a trace error on real hardware or — worse — a silent wrong-bytes
+read that the CPU interpreter happily executes.  These rules pin the
+hazards the fused ladder kernel's review shook out.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from repro.analysis.core import (
+    Finding,
+    Module,
+    Rule,
+    attr_chain,
+    call_chain,
+    register,
+)
+
+#: names that hold traced memory (Pallas Ref conventions in this repo)
+_REF_RE = re.compile(r".*_(ref|scr|buf|hbm|sem)$")
+#: bit-plane buffers: first axis is the plane index, statically < 16
+_PLANEISH_RE = re.compile(r"(plane|^kp_|^vp_)")
+_PLANE_BITS = 16
+#: host-state roots that must not be captured at trace time
+_HOST_STATE_PREFIXES = (
+    ("time",), ("random",), ("np", "random"), ("numpy", "random"),
+    ("os", "environ"), ("secrets",), ("uuid",),
+)
+_HOST_STATE_NAMES = {"perf_counter", "perf_counter_ns", "monotonic_ns"}
+
+
+def _is_kernel_file(path: str) -> bool:
+    return "repro/kernels/" in path and path.endswith("kernel.py")
+
+
+def _references_ref(expr: ast.AST) -> Optional[str]:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and _REF_RE.match(node.id):
+            return node.id
+        if isinstance(node, ast.Call):
+            chain = call_chain(node)
+            if chain[-1] == "program_id":
+                return ".".join(chain)
+    return None
+
+
+def _jit_decorated(func: ast.AST) -> bool:
+    """``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` (and pl.when —
+    a when-body runs inside an already-traced kernel)."""
+    for dec in getattr(func, "decorator_list", []):
+        chain = attr_chain(dec.func if isinstance(dec, ast.Call) else dec)
+        if chain[-1] == "jit":
+            return True
+        if (isinstance(dec, ast.Call) and chain[-1] == "partial"
+                and dec.args):
+            if attr_chain(dec.args[0])[-1] == "jit":
+                return True
+    return False
+
+
+def _is_traced_scope(func: ast.AST) -> bool:
+    """jit-wrapped wrappers AND kernel bodies (any function taking a Ref
+    parameter) trace at call time."""
+    if _jit_decorated(func):
+        return True
+    args = getattr(func, "args", None)
+    if args is None:
+        return False
+    names = [a.arg for a in (args.posonlyargs + args.args
+                             + args.kwonlyargs)]
+    return any(_REF_RE.match(n) for n in names)
+
+
+@register
+class KernelTracedBranch(Rule):
+    """No Python ``if``/``while`` on traced refs in a kernel body: the
+    branch is resolved ONCE at trace time against an abstract value —
+    use ``pl.when`` / ``jnp.where`` so the predicate runs on-device."""
+
+    name = "kernel-traced-branch"
+
+    def applies(self, path: str) -> bool:
+        return _is_kernel_file(path)
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.If, ast.While)):
+                ref = _references_ref(node.test)
+                if ref:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"Python '{kind}' on traced value '{ref}' — use "
+                        f"pl.when / jnp.where",
+                    )
+
+
+@register
+class KernelFloat64(Rule):
+    """No float64 in kernel files: TPUs have no f64 unit — jax silently
+    downcasts (or errors under x64), so an f64 literal/dtype in a kernel
+    is at best a lie about precision and at worst a Mosaic compile
+    failure."""
+
+    name = "kernel-float64"
+
+    def applies(self, path: str) -> bool:
+        return _is_kernel_file(path)
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"float64 dtype ({'.'.join(attr_chain(node))}) in a "
+                    f"kernel file",
+                )
+            elif (isinstance(node, ast.Constant)
+                    and node.value == "float64"):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    "'float64' dtype string in a kernel file",
+                )
+
+
+def _planeish(name: str) -> bool:
+    return bool(_PLANEISH_RE.search(name))
+
+
+def _int_literal(node: ast.AST) -> int | None:
+    """Literal int value of ``node``, seeing through unary +/- signs."""
+    sign = 1
+    while isinstance(node, ast.UnaryOp) and isinstance(
+            node.op, (ast.UAdd, ast.USub)):
+        if isinstance(node.op, ast.USub):
+            sign = -sign
+        node = node.operand
+    if isinstance(node, ast.Constant) and type(node.value) is int:
+        return sign * node.value
+    return None
+
+
+@register
+class KernelPlaneBounds(Rule):
+    """Static plane indices stay in ``[0, 16)``: the packed KV layout has
+    exactly 16 bit-planes (bf16), so a literal plane index or a
+    plane-loop bound outside that range reads memory that is not a
+    plane."""
+
+    name = "kernel-plane-bounds"
+
+    def applies(self, path: str) -> bool:
+        return _is_kernel_file(path)
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Subscript):
+                base = node.value
+                # x.at[i, ...] — look through the .at indexer
+                if isinstance(base, ast.Attribute) and base.attr == "at":
+                    base = base.value
+                name = attr_chain(base)[-1]
+                if not _planeish(name):
+                    continue
+                idx = node.slice
+                if isinstance(idx, ast.Tuple) and idx.elts:
+                    idx = idx.elts[0]
+                val = _int_literal(idx)
+                if val is not None and not 0 <= val < _PLANE_BITS:
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"plane index {val} on '{name}' outside "
+                        f"[0, {_PLANE_BITS})",
+                    )
+            elif isinstance(node, ast.Call):
+                chain = call_chain(node)
+                if chain[-1] != "fori_loop" or len(node.args) < 3:
+                    continue
+                body = attr_chain(node.args[2])[-1]
+                if not _planeish(body):
+                    continue
+                for bound in node.args[:2]:
+                    val = _int_literal(bound)
+                    if val is not None and not 0 <= val <= _PLANE_BITS:
+                        yield Finding(
+                            self.name, mod.path, node.lineno,
+                            node.col_offset,
+                            f"plane loop bound {val} outside "
+                            f"[0, {_PLANE_BITS}]",
+                        )
+
+
+@register
+class KernelDmaPredicate(Rule):
+    """Every ``make_async_copy`` sits under a ``pl.when`` predicate: an
+    unpredicated plane DMA always moves the bytes, so the partial-plane
+    bandwidth claim (planes keep..15 never touched) silently becomes a
+    full-precision read."""
+
+    name = "kernel-dma-predicate"
+
+    def applies(self, path: str) -> bool:
+        return _is_kernel_file(path)
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if call_chain(node)[-1] != "make_async_copy":
+                continue
+            if not self._under_when(mod, node):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    "make_async_copy outside a pl.when-predicated body — "
+                    "the DMA is unconditional",
+                )
+
+    @staticmethod
+    def _under_when(mod: Module, node: ast.Call) -> bool:
+        for anc in mod.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in anc.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    if attr_chain(target)[-1] == "when":
+                        return True
+        return False
+
+
+@register
+class KernelHostState(Rule):
+    """No host state captured at trace time: ``time.*``, ``random``/
+    ``np.random``, ``os.environ`` etc. inside a jit-wrapped function or a
+    kernel body execute ONCE when the function traces and bake that
+    moment's value into every later call — timings become constants, RNG
+    stops being random."""
+
+    name = "kernel-host-state"
+
+    def applies(self, path: str) -> bool:
+        return "repro/kernels/" in path
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for func in ast.walk(mod.tree):
+            if not isinstance(func, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not _is_traced_scope(func):
+                continue
+            for node in ast.walk(func):
+                chain = None
+                if isinstance(node, ast.Call):
+                    c = call_chain(node)
+                    if (tuple(c[:2]) in _HOST_STATE_PREFIXES
+                            or (c[0],) in _HOST_STATE_PREFIXES
+                            or c[-1] in _HOST_STATE_NAMES):
+                        chain = c
+                elif (isinstance(node, ast.Attribute)
+                        and node.attr == "environ"):
+                    chain = attr_chain(node)
+                if chain:
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"host state '{'.'.join(chain)}' inside traced "
+                        f"function '{func.name}'",
+                    )

@@ -1,0 +1,168 @@
+"""Layering rules: the import/attribute boundaries of the serving stack.
+
+The paper's accounting story depends on a strict module DAG: the scheduler
+drives memory only through the ``KVBackend`` protocol, kernels know nothing
+about serving policy, and telemetry observes everything while depending on
+nothing (so disabling it can never change behaviour).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, Rule, attr_chain, register
+
+#: names whose import into the scheduler means it is reaching past the
+#: KVBackend protocol into store/engine internals
+_SCHED_FORBIDDEN_NAMES = {
+    "CompressedKVStore", "CompressionEngineRuntime", "PageKey",
+    "PageEvictedError",
+}
+_SCHED_FORBIDDEN_MODULES = (
+    "repro.core.compressed_store", "repro.memctl.runtime",
+    "repro.memctl.queue",
+)
+#: constructing any of these inside the scheduler would re-create the
+#: pre-protocol world where the scheduler owned a memory tier
+_SCHED_FORBIDDEN_CTORS = {
+    "MemoryController", "CompressedKVStore", "CompressionEngineRuntime",
+}
+#: device-cache streams the scheduler must treat as opaque
+_SCHED_CACHE_KEYS = {"k", "v", "k_planes", "v_planes"}
+#: memory-tier attributes the scheduler may reach only via ``backend.*``
+_SCHED_TIER_ATTRS = {"store", "controller", "engine", "tiers"}
+
+
+def _import_findings(mod: Module, rule: str, node: ast.AST,
+                     message: str) -> Finding:
+    return Finding(rule, mod.path, node.lineno, node.col_offset, message)
+
+
+@register
+class SchedulerLayering(Rule):
+    """The scheduler owns no memory state: it may not import or construct
+    store/controller/engine internals, may not index the device cache's
+    k/v streams, and may reach ``store``/``controller``/``engine`` only
+    through ``backend.*`` — every device byte must flow through the
+    KVBackend protocol so the modeled memory controller sees it."""
+
+    name = "layering-scheduler"
+
+    def applies(self, path: str) -> bool:
+        return path.endswith("repro/serving/scheduler.py")
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ImportFrom):
+                module = node.module or ""
+                if module.startswith(_SCHED_FORBIDDEN_MODULES):
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"scheduler imports memory-tier internals "
+                        f"'{module}' — go through the KVBackend protocol",
+                    )
+                for alias in node.names:
+                    if alias.name in _SCHED_FORBIDDEN_NAMES:
+                        yield _import_findings(
+                            mod, self.name, node,
+                            f"scheduler imports '{alias.name}' — "
+                            f"store/engine internals are backend-only",
+                        )
+            elif isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                if node.func.id in _SCHED_FORBIDDEN_CTORS:
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"scheduler constructs {node.func.id}() — memory "
+                        f"tiers are built by make_backend(), not the "
+                        f"scheduler",
+                    )
+            elif isinstance(node, ast.Subscript):
+                chain = attr_chain(node.value)
+                key = node.slice
+                if ("cache" in chain[-1] and isinstance(key, ast.Constant)
+                        and key.value in _SCHED_CACHE_KEYS):
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"scheduler indexes the device cache "
+                        f"({chain[-1]}[{key.value!r}]) — the cache is "
+                        f"opaque outside the backend",
+                    )
+            elif isinstance(node, ast.Attribute):
+                chain = attr_chain(node)
+                if (node.attr in _SCHED_TIER_ATTRS
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"):
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"scheduler accesses self.{node.attr} — memory-tier "
+                        f"state lives behind self.backend.*",
+                    )
+                elif (len(chain) >= 2 and chain[-2] == "store"
+                        and node.attr.startswith(
+                            ("put", "account", "drop", "set_planes",
+                             "fetch", "note_"))):
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"scheduler drives the store directly "
+                        f"(store.{node.attr}) — submit backend jobs instead",
+                    )
+
+
+@register
+class KernelLayering(Rule):
+    """``kernels/`` is policy-free device code: it may not import the
+    serving layer (or telemetry) — a kernel that consults scheduler or
+    collector state would make compiled behaviour depend on host policy
+    and break the one-compile-per-config guarantee."""
+
+    name = "layering-kernels"
+
+    _FORBIDDEN = ("repro.serving", "repro.telemetry")
+
+    def applies(self, path: str) -> bool:
+        return "repro/kernels/" in path
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            names = []
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                names = [node.module]
+            for name in names:
+                if name.startswith(self._FORBIDDEN):
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"kernel module imports '{name}' — kernels/ must "
+                        f"not depend on serving/ or telemetry/",
+                    )
+
+
+@register
+class TelemetryLayering(Rule):
+    """``telemetry/`` is import-terminal: it may import the stdlib and
+    itself, nothing else in repro — so the collector can observe every
+    subsystem without creating a cycle, and turning telemetry off can
+    never change what the observed code does."""
+
+    name = "layering-telemetry"
+
+    def applies(self, path: str) -> bool:
+        return "repro/telemetry/" in path
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            names = []
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                names = [node.module]
+            for name in names:
+                if (name.startswith("repro.")
+                        and not name.startswith("repro.telemetry")):
+                    yield _import_findings(
+                        mod, self.name, node,
+                        f"telemetry imports '{name}' — telemetry/ is "
+                        f"import-terminal (stdlib + itself only)",
+                    )

@@ -1,0 +1,173 @@
+"""Mechanical defect rules: plain-Python bugs that hide in any module.
+
+These are repo-wide (src + tests + benchmarks): classic Python traps that
+runtime tests rarely exercise — a bare ``except:`` that eats
+``KeyboardInterrupt``, a mutable default argument shared across calls, a
+nested loop silently clobbering its outer loop variable, an import nobody
+uses.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.core import Finding, Module, Rule, register
+
+
+@register
+class BareExcept(Rule):
+    """``except:`` catches SystemExit/KeyboardInterrupt and hides the
+    real failure — name the exception (or ``except Exception:``)."""
+
+    name = "bare-except"
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    "bare 'except:' — catch a named exception class",
+                )
+
+
+@register
+class MutableDefault(Rule):
+    """A mutable default argument (``def f(x=[])``) is evaluated once and
+    shared by every call — state leaks across invocations.  Use ``None``
+    plus an in-body default."""
+
+    name = "mutable-default"
+
+    _CTORS = {"list", "dict", "set"}
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for func in ast.walk(mod.tree):
+            if not isinstance(func, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            defaults = list(func.args.defaults) + [
+                d for d in func.args.kw_defaults if d is not None
+            ]
+            for d in defaults:
+                bad = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(d, ast.Call)
+                    and isinstance(d.func, ast.Name)
+                    and d.func.id in self._CTORS
+                    and not d.args and not d.keywords
+                )
+                if bad:
+                    yield Finding(
+                        self.name, mod.path, d.lineno, d.col_offset,
+                        "mutable default argument — use None and create "
+                        "the object in the body",
+                    )
+
+
+@register
+class ShadowedLoopVar(Rule):
+    """A nested ``for`` reusing its enclosing loop's variable clobbers the
+    outer iteration state — the outer loop silently continues from
+    wherever the inner loop stopped."""
+
+    name = "shadowed-loop-var"
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        scopes: List[ast.AST] = [mod.tree] + [
+            n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for scope in scopes:
+            yield from self._walk(mod, scope, outer=set())
+
+    def _targets(self, node: ast.For) -> Set[str]:
+        return {n.id for n in ast.walk(node.target)
+                if isinstance(n, ast.Name)}
+
+    def _walk(self, mod: Module, node: ast.AST,
+              outer: Set[str]) -> Iterator[Finding]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                continue  # new scope; visited separately
+            if isinstance(child, ast.For):
+                names = self._targets(child)
+                clash = names & outer
+                if clash:
+                    yield Finding(
+                        self.name, mod.path, child.lineno,
+                        child.col_offset,
+                        f"loop variable {sorted(clash)} shadows an "
+                        f"enclosing loop's variable",
+                    )
+                yield from self._walk(mod, child, outer | names)
+            else:
+                yield from self._walk(mod, child, outer)
+
+
+@register
+class DeadImport(Rule):
+    """An import whose name is never used is dead weight — and in this
+    repo often a leftover from a moved invariant.  Re-export files
+    (``__init__.py``) and guarded optional-dependency imports are
+    exempt."""
+
+    name = "dead-import"
+
+    def applies(self, path: str) -> bool:
+        return not path.endswith("__init__.py")
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        used: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Name):
+                used.add(node.id)
+        # names re-exported via __all__ count as used
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "__all__"
+                            for t in node.targets)):
+                for elt in ast.walk(node.value):
+                    if (isinstance(elt, ast.Constant)
+                            and isinstance(elt.value, str)):
+                        used.add(elt.value)
+
+        guarded = self._guarded_lines(mod)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".")[0]
+                    yield from self._flag(mod, node, alias, bound, used,
+                                          guarded)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    bound = alias.asname or alias.name
+                    yield from self._flag(mod, node, alias, bound, used,
+                                          guarded)
+
+    def _guarded_lines(self, mod: Module) -> Set[int]:
+        """Lines inside try/except — the optional-dependency import
+        pattern rebinds names on ImportError; usage analysis on those is
+        unreliable, so they are exempt."""
+        lines: Set[int] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Try):
+                lines.update(range(node.lineno, node.end_lineno + 1))
+        return lines
+
+    def _flag(self, mod: Module, node, alias, bound: str, used: Set[str],
+              guarded: Set[int]) -> Iterator[Finding]:
+        if bound in used or node.lineno in guarded:
+            return
+        line = mod.lines[node.lineno - 1] if node.lineno <= len(
+            mod.lines) else ""
+        if "noqa" in line:  # already vouched for (ruff convention)
+            return
+        yield Finding(
+            self.name, mod.path, node.lineno, node.col_offset,
+            f"'{bound}' imported but never used",
+        )

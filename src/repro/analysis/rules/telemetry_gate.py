@@ -1,0 +1,112 @@
+"""Telemetry-gating rule: every collector call site stays branch-gated.
+
+The telemetry contract (PR 7) is "one ``if ...enabled:`` branch per site,
+bit-identical serving when off".  An unguarded ``telemetry.on_*()`` call
+still hits the null collector's method dispatch on the hot path — and the
+moment a site builds a payload eagerly, the telemetry-off run pays for
+dicts it throws away.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.core import Finding, Module, Rule, attr_chain, register
+
+#: receiver names that hold a telemetry collector
+_RECEIVERS = {"telemetry", "collector"}
+
+
+def _mentions_enabled(expr: ast.AST, aliases: Set[str]) -> bool:
+    """Does this test expression consult the collector's enabled flag —
+    directly (``...enabled``) or via a local alias assigned from it?"""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr == "enabled":
+            return True
+        if isinstance(node, ast.Name) and node.id in aliases:
+            return True
+    return False
+
+
+def _enabled_aliases(func: ast.AST) -> Set[str]:
+    """Names assigned from an ``...enabled`` expression in this function
+    (the ``live = telemetry.enabled`` pattern)."""
+    aliases: Set[str] = set()
+    if func is None:
+        return aliases
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and _mentions_enabled(node.value,
+                                                               set()):
+                aliases.add(tgt.id)
+    return aliases
+
+
+def _early_return_guarded(mod: Module, call: ast.Call,
+                          aliases: Set[str]) -> bool:
+    """``if not ...enabled: return`` earlier in any enclosing block
+    dominates the rest of that block."""
+    # the chain of statements from the call up to module level
+    spine = [a for a in mod.ancestors(call) if isinstance(a, ast.stmt)]
+    for stmt in spine:
+        parent = mod.parent(stmt)
+        if parent is None:
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            block: List = getattr(parent, field, None) or []
+            if stmt not in block:
+                continue
+            for prev in block[: block.index(stmt)]:
+                if (isinstance(prev, ast.If)
+                        and isinstance(prev.test, ast.UnaryOp)
+                        and isinstance(prev.test.op, ast.Not)
+                        and _mentions_enabled(prev.test.operand, aliases)
+                        and prev.body
+                        and isinstance(prev.body[-1],
+                                       (ast.Return, ast.Raise,
+                                        ast.Continue))):
+                    return True
+    return False
+
+
+@register
+class TelemetryGating(Rule):
+    """Every collector call in serving/memctl must be dominated by an
+    ``if ...enabled:`` guard (directly, via a ``live = ...enabled`` alias,
+    or an early ``if not ...enabled: return``) — the telemetry-off hot
+    path pays exactly one branch per site and stays bit-identical."""
+
+    name = "telemetry-gating"
+
+    def applies(self, path: str) -> bool:
+        return "repro/serving/" in path or "repro/memctl/" in path
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            chain = attr_chain(node.func)
+            if len(chain) < 2 or chain[-2] not in _RECEIVERS:
+                continue
+            func = mod.enclosing_function(node)
+            aliases = _enabled_aliases(func)
+            if self._guarded(mod, node, aliases):
+                continue
+            yield Finding(
+                self.name, mod.path, node.lineno, node.col_offset,
+                f"unguarded collector call {'.'.join(chain)}() — dominate "
+                f"it with an 'if ...enabled:' branch",
+            )
+
+    def _guarded(self, mod: Module, call: ast.Call,
+                 aliases: Set[str]) -> bool:
+        for anc in mod.ancestors(call):
+            if isinstance(anc, (ast.If, ast.IfExp)) and _mentions_enabled(
+                    anc.test, aliases):
+                return True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        return _early_return_guarded(mod, call, aliases)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

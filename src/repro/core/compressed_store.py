@@ -16,7 +16,6 @@ channel per group, mirroring the paper's per-block header fields.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
@@ -30,7 +29,6 @@ from repro.core.bitplane import (
     reaggregate_np,
     to_uint_np,
 )
-from repro.core.quantization import truncate_uint
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,7 +5,6 @@ to the kernel's block granularity, and value-space convenience entry points
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.bitplane import FloatSpec, from_uint, to_uint

@@ -28,7 +28,6 @@ from the store (Fig. 5).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention import kernel as K

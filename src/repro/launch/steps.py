@@ -6,7 +6,6 @@ and the drivers run on real hardware — one code path.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model

@@ -11,14 +11,11 @@ GB per device at train_4k.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.models.attention import attn_apply, attn_params
 from repro.models.layers import (
-    cross_entropy,
     embed_apply,
     embed_params,
     he_init,

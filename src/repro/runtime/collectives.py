@@ -12,13 +12,9 @@
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-
-from repro.optim.grad_utils import compress_int8
 
 
 def compressed_psum_grads(grads, err_tree, axis_name: str):

@@ -32,7 +32,6 @@ Hardware model: TPU v5e-class chip — 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import re
 from collections import defaultdict

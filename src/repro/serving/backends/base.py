@@ -49,7 +49,6 @@ import abc
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

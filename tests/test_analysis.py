@@ -1,0 +1,423 @@
+"""repro-lint (ISSUE 8): per-rule fixtures + repo-wide clean gate.
+
+Every rule gets three fixtures: known-bad source that must trigger the
+finding, known-good source that must pass, and the bad source with a
+``# repro-lint: disable=<rule>`` suppression that must pass again.  The
+final test runs the analyzer over the real repo and pins HEAD clean — the
+same invocation the CI lint job gates on.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_rules, check_file, check_source, run_paths
+from repro.analysis.cli import main as lint_main
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCHED_PATH = "src/repro/serving/scheduler.py"
+KERNEL_PATH = "src/repro/kernels/fixture/kernel.py"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def assert_fires(rule, src, path):
+    findings = [f for f in check_source(src, path) if f.rule == rule]
+    assert findings, f"{rule} did not fire on known-bad fixture"
+    return findings
+
+
+def assert_clean(rule, src, path):
+    findings = [f for f in check_source(src, path) if f.rule == rule]
+    assert not findings, f"{rule} fired on known-good fixture: {findings}"
+
+
+def suppress(src, rule):
+    """Append the disable directive to every non-blank fixture line."""
+    return "\n".join(
+        (f"{ln}  # repro-lint: disable={rule}" if ln.strip() else ln)
+        for ln in src.splitlines()
+    )
+
+
+def assert_suppressible(rule, src, path):
+    findings = [f for f in check_source(suppress(src, rule), path)
+                if f.rule == rule]
+    assert not findings, f"{rule} ignored its suppression directive"
+
+
+# ---------------------------------------------------------------------------
+# layering
+# ---------------------------------------------------------------------------
+
+
+class TestLayeringScheduler:
+    rule = "layering-scheduler"
+
+    def test_forbidden_import_fires(self):
+        bad = ("from repro.core.compressed_store import CompressedKVStore\n"
+               "x = CompressedKVStore\n")
+        fs = assert_fires(self.rule, bad, SCHED_PATH)
+        assert fs[0].line == 1
+        assert_suppressible(self.rule, bad, SCHED_PATH)
+
+    def test_ctor_and_cache_index_fire(self):
+        bad = ("def f(self, cache):\n"
+               "    c = MemoryController()\n"
+               "    return cache['k'], cache['v_planes']\n")
+        fs = assert_fires(self.rule, bad, SCHED_PATH)
+        assert {f.line for f in fs} == {2, 3}
+
+    def test_store_drive_and_self_tier_fire(self):
+        bad = ("def f(self):\n"
+               "    self.store.put_page(0)\n"
+               "    self.engine.tick()\n")
+        fs = assert_fires(self.rule, bad, SCHED_PATH)
+        assert len(fs) >= 2
+
+    def test_backend_access_is_clean(self):
+        good = ("def f(self):\n"
+                "    self.backend.tick()\n"
+                "    return self.backend.store\n")
+        assert_clean(self.rule, good, SCHED_PATH)
+
+    def test_rule_scoped_to_scheduler_module(self):
+        bad = "c = MemoryController()\n"
+        assert_clean(self.rule, bad, "src/repro/serving/backends/base.py")
+
+    def test_head_scheduler_is_clean(self):
+        """The conformance suite's old inspect.getsource pin, now shared
+        with the linter: the real scheduler module passes the rule."""
+        findings = check_file(REPO / "src/repro/serving/scheduler.py",
+                              rule_names=[self.rule])
+        assert findings == []
+
+
+class TestLayeringKernels:
+    rule = "layering-kernels"
+
+    def test_serving_import_fires(self):
+        bad = ("from repro.serving.scheduler import EngineConfig\n"
+               "x = EngineConfig\n")
+        assert_fires(self.rule, bad, "src/repro/kernels/foo/ops.py")
+        assert_suppressible(self.rule, bad, "src/repro/kernels/foo/ops.py")
+
+    def test_core_import_is_clean(self):
+        good = ("from repro.core.bitplane import FloatSpec\n"
+                "x = FloatSpec\n")
+        assert_clean(self.rule, good, "src/repro/kernels/foo/ops.py")
+
+
+class TestLayeringTelemetry:
+    rule = "layering-telemetry"
+
+    def test_repro_import_fires(self):
+        bad = ("from repro.memctl.stats import EngineStats\n"
+               "x = EngineStats\n")
+        assert_fires(self.rule, bad, "src/repro/telemetry/collector.py")
+        assert_suppressible(self.rule, bad,
+                            "src/repro/telemetry/collector.py")
+
+    def test_stdlib_and_self_imports_clean(self):
+        good = ("import time\n"
+                "from repro.telemetry.perfetto import write_perfetto_trace\n"
+                "x = (time, write_perfetto_trace)\n")
+        assert_clean(self.rule, good, "src/repro/telemetry/collector.py")
+
+
+# ---------------------------------------------------------------------------
+# accounting taint
+# ---------------------------------------------------------------------------
+
+
+class TestAccountingTaint:
+    rule = "accounting-taint"
+    bad = ("def f(codec, ctrl, data):\n"
+           "    blob = codec.compress(data)\n"
+           "    ctrl.stats.log(None)\n"
+           "    ctrl.stats.cancelled_jobs += 1\n"
+           "    return blob\n")
+
+    def test_codec_call_and_stats_mutation_fire(self):
+        fs = assert_fires(self.rule, self.bad,
+                          "src/repro/serving/backends/paged.py")
+        assert {f.line for f in fs} == {2, 3, 4}
+        assert_suppressible(self.rule, self.bad,
+                            "src/repro/serving/backends/paged.py")
+
+    def test_memctl_internals_are_allowed(self):
+        for allowed in ("src/repro/memctl/runtime.py",
+                        "src/repro/core/compressed_store.py",
+                        "src/repro/compression/lz4.py"):
+            assert_clean(self.rule, self.bad, allowed)
+
+    def test_engine_job_submission_is_clean(self):
+        good = ("def f(engine, job, stats):\n"
+                "    engine.submit(job)\n"
+                "    stats['kv_fetch_misses'] += 1\n"
+                "    n = engine.stats.cancelled_jobs\n")
+        assert_clean(self.rule, good, "src/repro/serving/backends/paged.py")
+
+
+# ---------------------------------------------------------------------------
+# telemetry gating
+# ---------------------------------------------------------------------------
+
+
+class TestTelemetryGating:
+    rule = "telemetry-gating"
+
+    def test_unguarded_site_fires(self):
+        bad = ("class B:\n"
+               "    def f(self):\n"
+               "        self.telemetry.on_step({})\n")
+        fs = assert_fires(self.rule, bad, "src/repro/serving/x.py")
+        assert fs[0].line == 3
+        assert_suppressible(self.rule, bad, "src/repro/serving/x.py")
+
+    @pytest.mark.parametrize("guard", [
+        # direct branch
+        ("        if self.telemetry.enabled:\n"
+         "            self.telemetry.on_step({})\n"),
+        # alias (the `live = telemetry.enabled` hot-loop pattern)
+        ("        live = self.telemetry.enabled\n"
+         "        if live and True:\n"
+         "            self.telemetry.on_step({})\n"),
+        # early return
+        ("        if not self.telemetry.enabled:\n"
+         "            return\n"
+         "        self.telemetry.on_step({})\n"),
+    ])
+    def test_guarded_sites_are_clean(self, guard):
+        good = "class B:\n    def f(self):\n" + guard
+        assert_clean(self.rule, good, "src/repro/memctl/runtime.py")
+
+    def test_rule_scoped_to_serving_and_memctl(self):
+        bad = "def f(telemetry):\n    telemetry.on_step({})\n"
+        assert_clean(self.rule, bad, "src/repro/telemetry/collector.py")
+        assert_clean(self.rule, bad, "src/repro/models/attention.py")
+
+
+# ---------------------------------------------------------------------------
+# kernel tracing safety
+# ---------------------------------------------------------------------------
+
+
+class TestKernelSafety:
+    def test_traced_branch_fires(self):
+        bad = ("def _kernel(q_ref, o_ref):\n"
+               "    if q_ref[0] > 0:\n"
+               "        o_ref[0] = 1\n")
+        fs = assert_fires("kernel-traced-branch", bad, KERNEL_PATH)
+        assert fs[0].line == 2
+        assert_suppressible("kernel-traced-branch", bad, KERNEL_PATH)
+
+    def test_static_branch_is_clean(self):
+        good = ("def _kernel(q_ref, o_ref, *, causal: bool):\n"
+                "    if causal:\n"
+                "        o_ref[...] = q_ref[...]\n")
+        assert_clean("kernel-traced-branch", good, KERNEL_PATH)
+
+    def test_float64_fires_and_f32_clean(self):
+        bad = "import jax.numpy as jnp\nACC = jnp.float64\n"
+        assert_fires("kernel-float64", bad, KERNEL_PATH)
+        assert_suppressible("kernel-float64", bad, KERNEL_PATH)
+        assert_clean("kernel-float64",
+                     "import jax.numpy as jnp\nACC = jnp.float32\n",
+                     KERNEL_PATH)
+
+    def test_plane_bounds_fire(self):
+        bad = ("def _kernel(kp_hbm, o_ref):\n"
+               "    x = kp_hbm[17]\n"
+               "    y = kp_hbm.at[-1, 0]\n")
+        fs = assert_fires("kernel-plane-bounds", bad, KERNEL_PATH)
+        assert {f.line for f in fs} == {2, 3}
+        assert_suppressible("kernel-plane-bounds", bad, KERNEL_PATH)
+
+    def test_plane_bounds_clean_in_range(self):
+        good = ("def _kernel(kp_hbm, o_ref, i):\n"
+                "    x = kp_hbm[3]\n"
+                "    y = kp_hbm[i]\n")
+        assert_clean("kernel-plane-bounds", good, KERNEL_PATH)
+
+    def test_unpredicated_dma_fires(self):
+        bad = ("def _kernel(kp_hbm, k_buf, sem, pltpu):\n"
+               "    c = pltpu.make_async_copy(kp_hbm, k_buf, sem)\n"
+               "    c.start()\n")
+        assert_fires("kernel-dma-predicate", bad, KERNEL_PATH)
+        assert_suppressible("kernel-dma-predicate", bad, KERNEL_PATH)
+
+    def test_predicated_dma_is_clean(self):
+        good = ("def _kernel(kp_hbm, k_buf, sem, pl, pltpu, i, keep):\n"
+                "    @pl.when(i < keep)\n"
+                "    def _copy():\n"
+                "        pltpu.make_async_copy(kp_hbm, k_buf, sem).start()\n")
+        assert_clean("kernel-dma-predicate", good, KERNEL_PATH)
+
+    def test_host_state_in_jit_fires(self):
+        bad = ("import functools, time\n"
+               "import jax\n"
+               "@functools.partial(jax.jit, static_argnames=())\n"
+               "def f(x):\n"
+               "    t = time.perf_counter_ns()\n"
+               "    return x\n")
+        fs = assert_fires("kernel-host-state", bad, KERNEL_PATH)
+        assert fs[0].line == 5
+        assert_suppressible("kernel-host-state", bad, KERNEL_PATH)
+
+    def test_host_state_outside_jit_is_clean(self):
+        good = ("import os\n"
+                "def default_interpret():\n"
+                "    return os.environ.get('X') is None\n")
+        assert_clean("kernel-host-state", good, KERNEL_PATH)
+
+    def test_kernel_rules_scoped_to_kernel_files(self):
+        bad = ("def _kernel(q_ref):\n"
+               "    if q_ref[0] > 0:\n"
+               "        pass\n")
+        assert_clean("kernel-traced-branch", bad,
+                     "src/repro/serving/scheduler.py")
+
+
+# ---------------------------------------------------------------------------
+# mechanical rules
+# ---------------------------------------------------------------------------
+
+
+class TestMechanical:
+    def test_bare_except(self):
+        bad = "try:\n    pass\nexcept:\n    pass\n"
+        assert_fires("bare-except", bad, "src/a.py")
+        assert_suppressible("bare-except", bad, "src/a.py")
+        assert_clean("bare-except",
+                     "try:\n    pass\nexcept ValueError:\n    pass\n",
+                     "src/a.py")
+
+    def test_mutable_default(self):
+        assert_fires("mutable-default", "def f(x=[]):\n    pass\n", "src/a.py")
+        assert_fires("mutable-default", "def f(x=dict()):\n    pass\n",
+                     "src/a.py")
+        assert_clean("mutable-default",
+                     "def f(x=None, y=(), z=1):\n    pass\n", "src/a.py")
+
+    def test_shadowed_loop_var(self):
+        bad = ("def f():\n"
+               "    for i in range(3):\n"
+               "        for i in range(2):\n"
+               "            pass\n")
+        fs = assert_fires("shadowed-loop-var", bad, "src/a.py")
+        assert fs[0].line == 3
+        # sequential reuse is fine; nested fn gets its own scope
+        good = ("def f():\n"
+                "    for i in range(3):\n"
+                "        pass\n"
+                "    for i in range(2):\n"
+                "        def g():\n"
+                "            for i in range(1):\n"
+                "                pass\n")
+        assert_clean("shadowed-loop-var", good, "src/a.py")
+
+    def test_dead_import(self):
+        assert_fires("dead-import", "import os\n", "src/a.py")
+        assert_clean("dead-import", "import os\nprint(os.sep)\n", "src/a.py")
+        # optional-dependency pattern is exempt
+        good = ("try:\n"
+                "    import zstandard\n"
+                "except ImportError:\n"
+                "    zstandard = None\n")
+        assert_clean("dead-import", good, "src/a.py")
+        # __init__.py re-exports are exempt
+        assert_clean("dead-import", "from repro.x import y\n",
+                     "src/repro/x/__init__.py")
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing: suppressions, CLI, registry
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_on_preceding_line():
+    src = ("# repro-lint: disable=bare-except\n"
+           "try:\n"
+           "    pass\n"
+           "except:\n"
+           "    pass\n")
+    # directive must sit on the finding's line or the line above; two
+    # lines up does nothing
+    assert rules_of(check_source(src, "src/a.py")) == {"bare-except"}
+    src2 = ("try:\n"
+            "    pass\n"
+            "# repro-lint: disable=bare-except\n"
+            "except:\n"
+            "    pass\n")
+    assert "bare-except" not in rules_of(check_source(src2, "src/a.py"))
+
+
+def test_disable_all_suppresses_everything():
+    src = "except_ = None\ndef f(x=[]):  # repro-lint: disable=all\n    pass\n"
+    assert check_source(src, "src/a.py") == []
+
+
+def test_rule_catalog_docstrings():
+    rules = all_rules()
+    assert len(rules) >= 14
+    for name, rule in rules.items():
+        assert rule.explanation(), f"rule {name} has no docstring"
+
+
+def test_unknown_rule_raises():
+    with pytest.raises(KeyError, match="unknown rule"):
+        check_source("x = 1\n", "src/a.py", rule_names=["no-such-rule"])
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "src" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text("def f(x=[]):\n    pass\n")
+    assert lint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    # finding line, named rule + file:line, and the docstring explanation
+    assert "mutable-default" in out and "bad.py:1" in out
+    assert "rule explanations:" in out
+    bad.write_text("def f(x=None):\n    pass\n")
+    assert lint_main([str(bad)]) == 0
+    assert lint_main([str(bad), "--rule", "nope"]) == 2
+
+
+def test_cli_json_format(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("try:\n    pass\nexcept:\n    pass\n")
+    assert lint_main([str(bad), "--format", "json"]) == 1
+    import json
+
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == 1
+    (f,) = payload["findings"]
+    assert f["rule"] == "bare-except" and f["line"] == 3
+    assert "bare-except" in payload["explanations"]
+
+
+def test_cli_rule_filter(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import os\ntry:\n    pass\nexcept:\n    pass\n")
+    assert lint_main([str(bad), "--rule", "dead-import"]) == 1
+    out = capsys.readouterr().out
+    assert "dead-import" in out and "bare-except" not in out
+
+
+# ---------------------------------------------------------------------------
+# repo-wide gate — HEAD is clean (the CI lint job's contract)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_head_is_clean():
+    paths = [REPO / p for p in
+             ("src", "tests", "benchmarks", "scripts", "examples")
+             if (REPO / p).exists()]
+    findings = run_paths(paths)
+    assert findings == [], "\n".join(
+        f"{f.location()}: {f.rule}: {f.message}" for f in findings
+    )

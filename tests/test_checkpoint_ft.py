@@ -87,7 +87,7 @@ def test_elastic_restore_new_sharding(tmp_path, params):
 # ---------------------------------------------------------- fault tolerance
 def test_straggler_detector():
     det = StragglerDetector(n_hosts=4, warmup_steps=3)
-    for step in range(10):
+    for _step in range(10):
         for h in range(4):
             det.record(h, 1.0 if h != 2 else 3.5)
     assert det.exclusion_list() == [2]

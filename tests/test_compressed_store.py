@@ -1,13 +1,11 @@
 """Block store: exact round-trips, partial fetch, ratio orderings."""
 
-import dataclasses
 
-import ml_dtypes
 import numpy as np
 import pytest
 
 from repro.compression import have_zstd
-from repro.core.bitplane import BF16, SPECS
+from repro.core.bitplane import BF16
 from repro.core.compressed_store import (
     StoreConfig,
     compress_kv,

@@ -54,7 +54,8 @@ def test_codec_on_structured_blocks(codec_name, rng):
     assert codec.ratio(zeros) > 20
     rand = rng.integers(0, 256, 4096).astype(np.uint8).tobytes()
     assert codec.ratio(rand) <= 1.1  # incompressible stays ~1
-    assert codec.decompress(codec.compress(rand)) == rand
+    # offline codec self-check, not a serving-path byte move
+    assert codec.decompress(codec.compress(rand)) == rand  # repro-lint: disable=accounting-taint
 
 
 def test_lz4_overlapping_match():

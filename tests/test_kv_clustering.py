@@ -3,7 +3,6 @@
 import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
@@ -11,7 +10,7 @@ except ImportError:  # bare env: fixed-seed fallback shim
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import kv_clustering as kvc
-from repro.core.bitplane import BF16, FP8_E4M3, to_uint_np
+from repro.core.bitplane import BF16, to_uint_np
 from repro.core.surrogates import logmag_kv_cache
 
 

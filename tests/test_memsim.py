@@ -1,10 +1,9 @@
 """DRAMSim3-lite + Table IV hardware model."""
 
-import numpy as np
 import pytest
 
 from repro.core.controller import AccessEvent
-from repro.memsim.dram import DDR5Config, DramSystem
+from repro.memsim.dram import DramSystem
 from repro.memsim.hardware import PAPER_POINTS, CompressionEngineModel
 from repro.memsim.trace import replay_controller_trace, synthetic_weight_trace
 

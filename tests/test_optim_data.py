@@ -18,7 +18,6 @@ from repro.optim.grad_utils import (
     clip_by_global_norm,
     compress_int8,
     decompress_int8,
-    ef_init,
     global_norm,
 )
 

@@ -3,7 +3,6 @@
 import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
@@ -12,7 +11,6 @@ except ImportError:  # bare env: fixed-seed fallback shim
 
 from repro.core.bitplane import BF16
 from repro.core.quantization import (
-    BF16_LADDER,
     PrecisionLadder,
     RouterPolicy,
     assign_page_precision,

@@ -1,6 +1,5 @@
 """Serving engine + compressed paged KV store."""
 
-import ml_dtypes
 import numpy as np
 import pytest
 

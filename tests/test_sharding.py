@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.configs.base import ALL_SHAPES, ARCH_IDS, arch_shapes, get_config
+from repro.configs.base import ARCH_IDS, arch_shapes, get_config
 from repro.models.model import build_model, input_specs
 from repro.optim.adamw import adamw_init
 from repro.runtime import sharding
