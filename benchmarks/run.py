@@ -48,6 +48,12 @@ MODULES = [
       # derives from it (here: the Perfetto trace of the last
       # bitplane/fused run, ISSUE 7)
       "artifact": ["BENCH_serving.json", "BENCH_serving_trace.json"]}),
+    ("serving_weight_stream", "benchmarks.serving_weight_stream",
+     {"fast": dict(n_requests=8, rate=0.8, max_steps=200),
+      "smoke": dict(n_requests=4, rate=0.8, max_steps=80),
+      # merges its rows INTO serving_bitplane's BENCH_serving.json (runs
+      # after it, read-modify-write) — same artifact, one more key
+      "artifact": ["BENCH_serving.json"]}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]

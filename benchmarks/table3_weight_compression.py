@@ -35,13 +35,20 @@ def run() -> dict:
         }
         for prec, (w, spec) in variants.items():
             ct = compress_weights(w, spec, cfg)
-            lossless = ct.savings
+            # the ONE savings definition (shared with the serving path's
+            # report()["weights"]): quoted over exact block bytes, never
+            # padded bytes — identical to the old 1 - 1/ratio here because
+            # offline tensors are unpadded, but now provably the same
+            # number the weight streamer reports for the same surrogates
+            lossless = ct.exact_savings
             total = 1 - (1 - LOSSY[prec]) * (1 - lossless)
             rows.append([
-                name, prec, f"{ct.ratio:.2f}", pct(lossless), pct(total),
+                name, prec, f"{ct.exact_ratio:.2f}", pct(lossless),
+                pct(total),
             ])
             out[f"{name}_{prec}"] = {
-                "ratio": ct.ratio, "lossless": lossless, "total": total,
+                "ratio": ct.exact_ratio, "lossless": lossless,
+                "total": total,
             }
     print("\n== Table III: weight lossless ratios + stacked savings ==")
     print(fmt_table(rows, ["model", "precision", "ratio", "lossless", "total"]))

@@ -78,3 +78,86 @@ class AccountingTaint(Rule):
                             f"{'.'.join(chain)} — counters are owned by "
                             f"the controller/engine",
                         )
+
+
+#: modules allowed on the weight path: the streaming subsystem itself, the
+#: lane engine it submits through, the accounting core that charges the
+#: bytes, the offline hardware model, and the checkpoint codec (an offline
+#: serialization consumer — its bytes never claim to be HBM traffic)
+_WEIGHT_ALLOWED = (
+    "repro/weights/",
+    "repro/memctl/",
+    "repro/core/",
+    "repro/memsim/",
+    "repro/checkpoint/",
+    "repro/compression/",
+)
+#: the weight codec entry points and the controller methods that charge
+#: weight bytes — outside the allowed set, both must happen inside a
+#: WEIGHT_FETCH engine job's completion callback (i.e. in repro/weights/)
+_WEIGHT_CODEC_FNS = {"compress_weights", "decompress_weights"}
+_WEIGHT_CHARGERS = {"write_weights", "read_weights", "account_weight_read"}
+
+
+@register
+class AccountingWeightStream(Rule):
+    """Weight decompress/fetch may touch HBM only via the lane engine
+    (ROADMAP PR 8 note): outside ``memctl/``/``weights/`` and the
+    accounting core, serving code must not call the weight codec path
+    (``compress_weights``/``decompress_weights``), charge weight reads
+    (``write_weights``/``read_weights``/``account_weight_read``), or
+    mutate ``weight_*`` stats counters — a weight byte the lane engine
+    never serviced is bandwidth ``report()["weights"]`` never sees."""
+
+    name = "accounting-weight-stream"
+
+    def applies(self, path: str) -> bool:
+        return ("src/repro/" in path
+                and not any(allow in path for allow in _WEIGHT_ALLOWED))
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                fname = None
+                if isinstance(node.func, ast.Name):
+                    fname = node.func.id
+                    label = fname
+                elif isinstance(node.func, ast.Attribute):
+                    fname = node.func.attr
+                    label = ".".join(attr_chain(node.func))
+                if fname in _WEIGHT_CODEC_FNS:
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"weight codec call {label}() outside the weight "
+                        f"store — decompresses must ride a WEIGHT_FETCH "
+                        f"lane job",
+                    )
+                elif (fname in _WEIGHT_CHARGERS
+                        and isinstance(node.func, ast.Attribute)):
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"weight-byte charge {label}() outside the weight "
+                        f"streamer — only its job callbacks may charge "
+                        f"weight reads",
+                    )
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if not (isinstance(tgt, ast.Subscript)
+                            and isinstance(tgt.slice, ast.Constant)
+                            and isinstance(tgt.slice.value, str)
+                            and tgt.slice.value.startswith("weight_")):
+                        continue
+                    base = tgt.value
+                    base_name = (base.id if isinstance(base, ast.Name)
+                                 else base.attr
+                                 if isinstance(base, ast.Attribute) else None)
+                    if base_name == "stats" or (
+                            base_name and base_name.endswith("stats")):
+                        yield Finding(
+                            self.name, mod.path, tgt.lineno, tgt.col_offset,
+                            f"weight stats mutation "
+                            f"[{tgt.slice.value!r}] outside the weight "
+                            f"subsystem — streamer counters own these",
+                        )

@@ -101,6 +101,22 @@ class CompressedTensor:
         """Footprint reduction fraction (paper reports 1 - 1/ratio)."""
         return 1.0 - 1.0 / self.ratio if self.ratio > 0 else 0.0
 
+    @property
+    def exact_ratio(self) -> float:
+        """Compression ratio over pad-free bytes (valid_logical / stored)."""
+        return self.valid_logical_bytes / max(1, self.stored_bytes)
+
+    @property
+    def exact_savings(self) -> float:
+        """THE shared savings definition: footprint reduction quoted over
+        exact (pad-free) block bytes, ``1 - stored / valid_logical``.  Both
+        offline Table III and the serving path's ``report()["weights"]``
+        quote this, so a tensor padded to the lane stripe granularity can
+        never inflate (or hide) the number.  Equals ``savings`` whenever
+        nothing was padded."""
+        vb = self.valid_logical_bytes
+        return 1.0 - self.stored_bytes / vb if vb > 0 else 0.0
+
     def plane_stored_bytes(self) -> np.ndarray:
         """(bits,) compressed bytes per plane index (Fig. 8's x-axis)."""
         assert self.config.layout == "bitplane"
@@ -156,8 +172,16 @@ def _pad_to(u: np.ndarray, multiple: int) -> np.ndarray:
 
 
 def compress_weights(
-    arr: np.ndarray, spec: FloatSpec, cfg: StoreConfig = StoreConfig()
+    arr: np.ndarray,
+    spec: FloatSpec,
+    cfg: StoreConfig = StoreConfig(),
+    valid_values: int | None = None,
 ) -> CompressedTensor:
+    """``valid_values``: element count the caller actually asked to store.
+    The weight store pads each per-tensor block to the lane engine's stripe
+    granularity (a whole ``values_per_segment``); the pad is physically
+    stored but is not logical data, so savings/bandwidth are quoted against
+    ``valid_logical_bytes`` (see ``CompressedTensor.exact_savings``)."""
     codec = get_codec(cfg.codec)
     u = to_uint_np(arr, spec)
     n_values = u.shape[0]
@@ -180,6 +204,7 @@ def compress_weights(
         kind="weights",
         n_values=n_values,
         segments=segments,
+        valid_values=valid_values,
     )
 
 

@@ -134,21 +134,48 @@ class MemoryController:
         self.stats.log(ev)
 
     # -------------------------------------------------------------- weights
-    def write_weights(self, name: str, arr: np.ndarray, spec: FloatSpec) -> CompressedTensor:
-        ct = compress_weights(arr, spec, self.config)
+    def write_weights(
+        self, name: str, arr: np.ndarray, spec: FloatSpec,
+        valid_values: int | None = None,
+    ) -> CompressedTensor:
+        """``valid_values`` marks how many leading elements of ``arr`` are
+        real data when the weight store pads a tensor block to the lane
+        stripe granularity — the event's logical bytes (and every later
+        read) are quoted pad-free, mirroring ``write_kv_page``."""
+        ct = compress_weights(arr, spec, self.config,
+                              valid_values=valid_values)
         self._weights[name] = ct
         self._log(
-            AccessEvent("weight_write", name, ct.logical_bytes, ct.stored_bytes)
+            AccessEvent("weight_write", name, ct.valid_logical_bytes,
+                        ct.stored_bytes)
         )
         return ct
 
-    def read_weights(self, name: str, planes: int | None = None) -> np.ndarray:
+    def _log_weight_read(self, name: str, planes: int | None) -> tuple:
         ct = self._weights[name]
         fetched = ct.fetch_bytes(planes)
-        self._log(
-            AccessEvent("weight_read", name, ct.logical_bytes, fetched, planes)
-        )
+        device = (ct.valid_logical_bytes if planes is None else
+                  max(1, round(ct.valid_logical_bytes * planes / ct.spec.bits)))
+        self._log(AccessEvent("weight_read", name, ct.valid_logical_bytes,
+                              fetched, planes, device_bytes=device))
+        return ct, fetched
+
+    def read_weights(self, name: str, planes: int | None = None) -> np.ndarray:
+        ct, _ = self._log_weight_read(name, planes)
         return decompress_weights(ct, planes)
+
+    def account_weight_read(self, name: str, planes: int | None = None) -> int:
+        """Log a weight read without decompressing (bandwidth modeling for
+        the weight streamer: the lossless round-trip is pinned by tests, so
+        steady-state streaming charges the bus/lane cost only).  Returns
+        the physical bytes the bus would move."""
+        return self._log_weight_read(name, planes)[1]
+
+    def has_weights(self, name: str) -> bool:
+        return name in self._weights
+
+    def weight_tensor(self, name: str) -> CompressedTensor:
+        return self._weights[name]
 
     # ------------------------------------------------------------------- KV
     def write_kv_page(
@@ -207,7 +234,7 @@ class MemoryController:
     # ------------------------------------------------------------ accounting
     def footprint(self) -> dict:
         w = sum(ct.stored_bytes for ct in self._weights.values())
-        wl = sum(ct.logical_bytes for ct in self._weights.values())
+        wl = sum(ct.valid_logical_bytes for ct in self._weights.values())
         k = sum(ct.stored_bytes for ct in self._kv_pages.values())
         kl = sum(ct.valid_logical_bytes for ct in self._kv_pages.values())
         return {

@@ -1,10 +1,14 @@
 """Prioritized (de)compression job queue.
 
-Three strict-priority classes, FIFO inside each class (paper §IV: the
+Four strict-priority classes, FIFO inside each class (paper §IV: the
 controller services latency-critical traffic first and lets the compression
 engine soak up slack cycles):
 
 * ``DECODE_FETCH`` — partial-plane KV fetches on the decode critical path.
+* ``WEIGHT_FETCH`` — weight-stream layer decompresses fetched ahead of
+  compute: latency-critical for the NEXT layer's matmuls, so they beat
+  writes, but they prefetch a whole lane window ahead and therefore yield
+  to the decode-critical KV fetches of the CURRENT step.
 * ``KV_WRITE`` — prefill-page and filled-decode-page compress-and-store.
 * ``BACKGROUND`` — re-compression of evicted pages (re-activation) and
   eviction write-back to the capacity tier.
@@ -25,8 +29,9 @@ from typing import Callable, Deque, Dict, Hashable, Optional
 
 class JobClass(enum.IntEnum):
     DECODE_FETCH = 0
-    KV_WRITE = 1
-    BACKGROUND = 2
+    WEIGHT_FETCH = 1
+    KV_WRITE = 2
+    BACKGROUND = 3
 
 
 @dataclasses.dataclass

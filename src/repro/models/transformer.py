@@ -74,6 +74,38 @@ def head_weight(params):
     return params.get("lm_head", {"w": params["embed"]["table"]})["w"]
 
 
+def split_layer_params(params):
+    """Per-layer weight handles: views into the stacked ``params["layers"]``
+    pytree, one pytree per transformer layer.  The weight-streaming
+    subsystem ingests these (per-layer per-tensor blocks) instead of the
+    monolithic resident pytree; ``run_stack`` keeps scanning the stacked
+    form, so handles are zero-copy slices, not a second residency."""
+    layers = params["layers"]
+    n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    return [
+        jax.tree_util.tree_map(lambda a, i=i: a[i], layers) for i in range(n)
+    ]
+
+
+def join_layer_params(handles):
+    """Inverse of :func:`split_layer_params` — restack per-layer handles
+    into the scan-ready ``params["layers"]`` pytree (round-trip tests)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *handles)
+
+
+def named_layer_tensors(handle):
+    """Flatten one layer handle to ``(path_string, leaf)`` pairs — stable
+    tensor names ("attn/wq", "mlp/w1", ...) for the weight store."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(handle)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Layer body + stack
 # ---------------------------------------------------------------------------

@@ -232,6 +232,15 @@ class KVBackend(abc.ABC):
         self.tiers: List[MemTier] = self._build_tiers(controller)
         self._cache = None
         self._slots: Dict[int, SlotState] = {}
+        # weight streaming (ISSUE 9): one streamer per tier, built by
+        # attach_weights; empty under weight_stream='resident'
+        if cfg.weight_stream not in ("resident", "compressed"):
+            raise ValueError(
+                f"weight_stream must be 'resident' or 'compressed', got "
+                f"{cfg.weight_stream!r}"
+            )
+        self.streamers: list = []
+        self._weight_pass_pending = False
 
     # ------------------------------------------------------------ validation
     @classmethod
@@ -283,6 +292,39 @@ class KVBackend(abc.ABC):
         """Which tiers own (a channel slice of) this page: [(tier, cols)].
         ``cols=None`` means the full page."""
         return [(self.tiers[0], None)]
+
+    # -------------------------------------------------------- weight streaming
+    def attach_weights(self, params) -> None:
+        """Ingest the model's per-layer weight handles into each tier's
+        block-compressed weight store and build the streamers
+        (``weight_stream='compressed'``; no-op under 'resident').  Sharded
+        backends ingest a contiguous 1/n tensor-parallel slice of every
+        tensor per tier, so total weight bytes across tiers are conserved
+        and every shard streams its own share through its own lanes."""
+        if self.cfg.weight_stream != "compressed":
+            return
+        from repro.models.transformer import split_layer_params
+        from repro.weights import CompressedWeightStore, WeightStreamer
+
+        handles = split_layer_params(params)
+        n = len(self.tiers)
+        self.streamers = []
+        for tier in self.tiers:
+            store = CompressedWeightStore.from_handles(
+                handles, tier.controller, part=(tier.index, n)
+            )
+            self.streamers.append(WeightStreamer(
+                store, tier.engine, telemetry=self.telemetry,
+                prefetch_depth=self.cfg.weight_prefetch_depth,
+                tier=tier.index,
+            ))
+
+    def _note_compute(self) -> None:
+        """A prefill chunk or decode token ran this step: the step's engine
+        window must carry one weight pass (all compute in a step shares the
+        streamed layer buffers — weight bytes are charged exactly once per
+        layer per step)."""
+        self._weight_pass_pending = True
 
     # ---------------------------------------------------------- device cache
     @property
@@ -454,6 +496,7 @@ class KVBackend(abc.ABC):
         completed pages to the tier (full pages as chunks land; on the
         final call also the ragged tail as an exact-length page), then
         assign ladder planes once the prompt is complete."""
+        self._note_compute()
         if final and self.mcfg.decode_staging > 0:
             # prompt KV landed in the main cache; staging anchors here
             self._slots[slot_id].stage_base = end
@@ -478,6 +521,7 @@ class KVBackend(abc.ABC):
         """One decode token landed at position ln-1: store the page if it
         just filled (and re-rank the ladder), then queue this step's
         decode-critical fetch traffic for the slot."""
+        self._note_compute()
         st = self._slots[slot_id]
         ws = self.mcfg.decode_staging
         if ws > 0 and ln - st.stage_base >= ws:
@@ -715,8 +759,21 @@ class KVBackend(abc.ABC):
 
     # ---------------------------------------------------------------- engine
     def tick(self) -> None:
+        compute = self._weight_pass_pending
+        self._weight_pass_pending = False
+        if compute:
+            # weight jobs enter the SAME lane window the step's KV traffic
+            # is about to contend for: current pass first, then the next
+            # pass's prefetch-depth layers (the double buffer)
+            for ws in self.streamers:
+                ws.begin_pass()
         for tier in self.tiers:
             tier.engine.tick()
+        if compute:
+            # any current-pass layer the window could not service is a
+            # stall, charged to modeled latency (engine_time_ns)
+            for ws in self.streamers:
+                ws.window_close()
 
     def backlog(self) -> int:
         """Queued engine jobs across all tiers (eviction write-backs,
@@ -731,8 +788,15 @@ class KVBackend(abc.ABC):
     def engine_time_ns(self) -> float:
         """Current modeled engine-clock time: the worst tier's serviced-work
         watermark (monotone — a request's fetches are only as done as the
-        slowest shard's).  The telemetry collector's second clock domain."""
-        return max(tier.engine.clock.elapsed_ns for tier in self.tiers)
+        slowest shard's), plus the worst tier's cumulative weight-stream
+        stall time (compute waited for a layer the lane window could not
+        deliver; both terms are monotone, so the telemetry clock domain
+        stays monotone).  The telemetry collector's second clock domain."""
+        base = max(tier.engine.clock.elapsed_ns for tier in self.tiers)
+        stall = max(
+            (ws.counters["stall_ns"] for ws in self.streamers), default=0.0
+        )
+        return base + stall
 
     # ------------------------------------------------------------- reporting
     def note_peaks(self) -> None:
@@ -800,7 +864,57 @@ class KVBackend(abc.ABC):
         s["engine_deferred_jobs"] = er["deferred_job_steps"]
         s["engine_queue_depth_p99"] = er["queue_depth"]["p99"]
         s["admit_pressure_ns"] = self.admit_pressure_ns()
+        # lane-budget split: which job class the modeled silicon spent its
+        # utilization on (WEIGHT_FETCH appears once weights stream)
+        total_sb = sum(er["serviced_bytes"].values())
+        if total_sb:
+            s["engine_utilization_by_class"] = {
+                k: er["utilization"] * v / total_sb
+                for k, v in er["serviced_bytes"].items()
+            }
+        # weight-side traffic (ISSUE 9): savings quoted over exact
+        # (pad-free) block bytes — the same definition Table III quotes —
+        # next to KV's, plus streamer stall exposure
+        s["weights"] = self._weights_report()
         return s
+
+    def _weights_report(self) -> dict:
+        w: dict = {"mode": self.cfg.weight_stream}
+        if not self.streamers:
+            return w
+        rl = rp = stored = logical = 0
+        for tier in self.tiers:
+            l, p = tier.controller.stats.kind_bytes("weight_read")
+            rl += l
+            rp += p
+            fp = tier.controller.footprint()
+            stored += fp["weights_stored"]
+            logical += fp["weights_logical"]
+        reps = [ws.report() for ws in self.streamers]
+        w.update({
+            "n_layers": reps[0]["n_layers"],
+            "prefetch_depth": reps[0]["prefetch_depth"],
+            "stored_bytes": stored,
+            "logical_bytes": logical,
+            # capacity: resident compressed footprint vs pad-free logical
+            "capacity_saving": 1 - stored / logical if logical else 0.0,
+            "read_logical_bytes": rl,
+            "read_physical_bytes": rp,
+            # bandwidth: what the bus moved for streamed reads vs what the
+            # compute fabric consumed (the paper's 25.2% headline, now a
+            # serving number)
+            "bandwidth_saving": 1 - rp / rl if rl else 0.0,
+            "fetch_jobs": sum(r["fetch_jobs"] for r in reps),
+            # passes: every tier consumes the same step stream, so these
+            # are per-tier values, not sums
+            "passes_consumed": max(r["passes_consumed"] for r in reps),
+            "passes_fetched": max(r["passes_fetched"] for r in reps),
+            "stall_steps": max(r["stall_steps"] for r in reps),
+            "stall_layers": sum(r["stall_layers"] for r in reps),
+            "stall_ns": max(r["stall_ns"] for r in reps),
+            "stall_fraction": max(r["stall_fraction"] for r in reps),
+        })
+        return w
 
     # ------------------------------------------------- single-tier compat
     @property

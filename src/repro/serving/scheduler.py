@@ -186,6 +186,26 @@ class EngineConfig:
     #: the no-op null collector — every instrumentation site pays one
     #: branch and the serving output stays bit-identical.
     telemetry: Optional[TelemetryConfig] = None
+    #: weight-side streaming (ISSUE 9): 'resident' — layer weights sit
+    #: dense in HBM and no weight traffic touches the lanes (the
+    #: pre-weight-stream behaviour); 'compressed' — layer weights are
+    #: stored block-compressed behind each tier's controller and every
+    #: compute step streams one decompress pass through the SAME lane
+    #: budget KV fetches contend for (``JobClass.WEIGHT_FETCH``),
+    #: double-buffered one pass ahead.  Compression is lossless, so
+    #: streamed decoding is bit-identical to resident (the conformance
+    #: suite asserts it).  The default honours the REPRO_WEIGHT_STREAM
+    #: env var (CI leg), mirroring REPRO_SERVING_BACKEND.
+    weight_stream: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_WEIGHT_STREAM",
+                                               "resident")
+    )
+    #: layers of the NEXT weight pass prefetched during the current step's
+    #: lane window (weight_stream='compressed').  None = the whole next
+    #: pass (full double buffer, fewest stalls); 0 = no overlap — every
+    #: pass is fetched cold inside its own window (upper-bounds stall
+    #: exposure under tight ``engine`` budgets)
+    weight_prefetch_depth: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -315,6 +335,12 @@ class ContinuousScheduler:
         self.backend = make_backend(model, cfg, controller=controller,
                                     stats=self.stats,
                                     telemetry=self.telemetry)
+        # weight streaming (ISSUE 9): ingest the per-layer handles into the
+        # backend's tiers; no-op under weight_stream='resident'.  Compute
+        # still runs from the resident params (compression is lossless and
+        # the streamer models bandwidth/latency), so decoding stays
+        # bit-identical either way.
+        self.backend.attach_weights(params)
         if self.telemetry.enabled:
             # both readers are monotone, so span stamps are monotone in
             # both clock domains (the lifecycle invariant tests pin)

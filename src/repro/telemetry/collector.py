@@ -188,10 +188,14 @@ class TelemetryCollector:
         self.engine_steps: List[dict] = []
         #: (tier, lane, start_cycle, end_cycle, nbytes) lane busy intervals
         self.lane_blocks: List[Tuple[int, int, int, int, int]] = []
+        #: (tier, layer, pass_idx, service_cycle, logical, physical) weight
+        #: layer fetches — the streamer's marks on the lane timeline
+        self.weight_events: List[Tuple[int, int, int, int, int, int]] = []
         self.counts: Dict[str, int] = {
             "evictions": 0, "eviction_bytes": 0,
             "ladder_reranks": 0, "plane_map_pushes": 0,
             "lane_blocks_dropped": 0, "fetches": 0,
+            "weight_fetches": 0, "weight_stalls": 0,
         }
 
     # -------------------------------------------------------------- clocks
@@ -277,6 +281,25 @@ class TelemetryCollector:
         """An actual device plane-map row write (unchanged rows skip the
         transfer and are NOT counted — the count is real device traffic)."""
         self.counts["plane_map_pushes"] += 1
+
+    # ------------------------------------------------------ weight stream
+    def on_weight_fetch(self, tier: int, layer: int, pass_idx: int,
+                        logical: int, physical: int, cycle: int) -> None:
+        """A weight-stream layer fetch was serviced by the lane engine
+        (stamped with its service cycle, so it lands on the lane timeline
+        next to the KV blocks it contended with)."""
+        self.counts["weight_fetches"] += 1
+        if self.cfg.lane_timeline:
+            self.weight_events.append(
+                (tier, layer, pass_idx, cycle, logical, physical)
+            )
+
+    def on_weight_stall(self, tier: int, pass_idx: int, layers: int,
+                        ns: float) -> None:
+        """Compute finished a step before the lane window delivered every
+        layer of its weight pass — the residual drain is charged to
+        modeled latency."""
+        self.counts["weight_stalls"] += 1
 
     # ----------------------------------------------------- engine / lanes
     def on_engine_step(self, tier: int, record: dict) -> None:

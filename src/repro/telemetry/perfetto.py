@@ -36,6 +36,7 @@ VALID_PHASES = {"B", "E", "X", "C", "i", "I", "M"}
 SCHED_PID = 1
 COUNTER_TID = 1000
 MEMCTL_PID_BASE = 100
+WEIGHT_TID = 999  # per-tier weight-stream instants (above the lane tids)
 
 
 def _us(ns: float) -> float:
@@ -110,8 +111,10 @@ def build_trace_events(collector, clock_ghz: float = 2.0) -> List[dict]:
                            "name": name, "ts": ts,
                            "args": {name: rec[name]}})
     # memctl tier processes (engine clock)
+    weight_events = getattr(collector, "weight_events", [])
     tiers = sorted({t for t, *_ in collector.lane_blocks}
-                   | {r["tier"] for r in collector.engine_steps})
+                   | {r["tier"] for r in collector.engine_steps}
+                   | {t for t, *_ in weight_events})
     lanes_seen = set()
     for tier in tiers:
         ev.append({"ph": "M", "pid": MEMCTL_PID_BASE + tier, "tid": 0,
@@ -129,6 +132,23 @@ def build_trace_events(collector, clock_ghz: float = 2.0) -> List[dict]:
         ev.append({"ph": "X", "pid": pid, "tid": lane, "cat": "lane",
                    "name": f"block {nbytes}B", "ts": ts, "dur": dur,
                    "args": {"nbytes": nbytes, "cycles": c1 - c0}})
+    # weight-stream layer fetches: instants on their own thread of each
+    # memctl tier process, stamped at the engine service cycle so they sit
+    # on the lane timeline next to the KV blocks they contended with
+    wtiers_seen = set()
+    for tier, layer, pass_idx, cycle, logical, physical in weight_events:
+        pid = MEMCTL_PID_BASE + tier
+        if tier not in wtiers_seen:
+            wtiers_seen.add(tier)
+            ev.append({"ph": "M", "pid": pid, "tid": WEIGHT_TID,
+                       "name": "thread_name",
+                       "args": {"name": "weight stream"}})
+        ev.append({"ph": "i", "pid": pid, "tid": WEIGHT_TID, "s": "t",
+                   "cat": "weights", "name": f"L{layer} pass {pass_idx}",
+                   "ts": _us(cycle / clock_ghz),
+                   "args": {"layer": layer, "pass": pass_idx,
+                            "logical_bytes": logical,
+                            "physical_bytes": physical}})
     for rec in collector.engine_steps:
         pid = MEMCTL_PID_BASE + rec["tier"]
         ts = _us(rec.get("window_start_cycle", 0) / clock_ghz)

@@ -162,6 +162,49 @@ class TestAccountingTaint:
         assert_clean(self.rule, good, "src/repro/serving/backends/paged.py")
 
 
+class TestAccountingWeightStream:
+    rule = "accounting-weight-stream"
+    bad = ("def f(ctrl, arr, spec, stats):\n"
+           "    ct = compress_weights(arr, spec)\n"
+           "    ctrl.account_weight_read('L0/attn/wq')\n"
+           "    stats['weight_stall_ns'] += 1.0\n"
+           "    return ct\n")
+
+    def test_codec_charge_and_stats_fire_in_serving(self):
+        fs = assert_fires(self.rule, self.bad,
+                          "src/repro/serving/backends/paged.py")
+        assert {f.line for f in fs} == {2, 3, 4}
+        assert_suppressible(self.rule, self.bad,
+                            "src/repro/serving/backends/paged.py")
+
+    def test_attribute_codec_call_fires(self):
+        bad = ("def f(store, ct):\n"
+               "    return store.decompress_weights(ct)\n")
+        assert_fires(self.rule, bad, "src/repro/serving/scheduler.py")
+
+    def test_weight_subsystem_and_core_are_allowed(self):
+        for allowed in ("src/repro/weights/streamer.py",
+                        "src/repro/weights/store.py",
+                        "src/repro/memctl/runtime.py",
+                        "src/repro/core/controller.py",
+                        "src/repro/checkpoint/checkpoint.py"):
+            assert_clean(self.rule, self.bad, allowed)
+
+    def test_tests_and_benchmarks_are_exempt(self):
+        # offline Table III legitimately calls compress_weights directly
+        assert_clean(self.rule, self.bad,
+                     "benchmarks/table3_weight_compression.py")
+        assert_clean(self.rule, self.bad, "tests/test_weight_stream.py")
+
+    def test_reading_weight_report_is_clean(self):
+        good = ("def f(self, tier):\n"
+                "    rl, rp = tier.controller.stats.kind_bytes("
+                "'weight_read')\n"
+                "    self.streamers[0].begin_pass()\n"
+                "    return {'bandwidth_saving': 1 - rp / max(1, rl)}\n")
+        assert_clean(self.rule, good, "src/repro/serving/backends/base.py")
+
+
 # ---------------------------------------------------------------------------
 # telemetry gating
 # ---------------------------------------------------------------------------
@@ -363,7 +406,7 @@ def test_disable_all_suppresses_everything():
 
 def test_rule_catalog_docstrings():
     rules = all_rules()
-    assert len(rules) >= 14
+    assert len(rules) >= 15
     for name, rule in rules.items():
         assert rule.explanation(), f"rule {name} has no docstring"
 

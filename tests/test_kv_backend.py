@@ -167,8 +167,13 @@ def test_eviction_reactivation_charged_exactly_once(smoke_model, backend,
     only) never inflate the count, and a deferred re-activation is charged
     once no matter how many steps it waits."""
     model, params = smoke_model
+    # weight_stream pinned resident: this lane window (2 lanes x 512
+    # cycles) is sized so KV writes thrash the byte budget; a streamed
+    # weight pass outranks KV_WRITE and would monopolize it entirely (the
+    # streaming x thrash interaction is pinned in test_weight_stream.py)
     cfg = _cfg(backend, shards, ladder=LADDER, max_stored_bytes=10 * 1024,
-               engine=MemCtlConfig(lanes=2, step_cycles=512))
+               engine=MemCtlConfig(lanes=2, step_cycles=512),
+               weight_stream="resident")
     sched, reqs = _serve(model, params, cfg, [_prompt(80), _prompt(80, 3)],
                          max_new=16)
     rep = sched.report()
@@ -476,6 +481,10 @@ def test_bitplane_device_bytes_equal_controller_kv_read(
     kw = dict(
         device_kv="bitplane", ladder=ladder, max_stored_bytes=10 * 1024,
         engine=MemCtlConfig(lanes=2, step_cycles=512),
+        # resident weights: this window is sized for KV-only thrash; a
+        # streamed weight pass outranks KV_WRITE and would starve the
+        # eviction path this test exists to pin
+        weight_stream="resident",
     )
     cfg = (_cfg(backend, shards, **kw) if backend != "ring" else
            EngineConfig(max_batch=2, max_ctx=96, backend="ring",
@@ -672,3 +681,64 @@ def test_bitplane_rejects_unpackable_head_dim(smoke_model):
         make_backend(model, _cfg("paged", 1, device_kv="bitplane"))
     with pytest.raises(ValueError, match="device_kv"):
         make_backend(smoke_model[0], _cfg("paged", 1, device_kv="fp4"))
+
+
+# ---------------------------------------------------------------------------
+# Weight streaming conformance (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,shards", BACKEND_CASES)
+def test_weight_stream_tokens_bit_identical(smoke_model, backend, shards):
+    """Streamed block-compressed weights are lossless end to end: greedy
+    tokens under weight_stream='compressed' equal 'resident' exactly, on
+    every tier topology, while report()['weights'] carries real traffic."""
+    model, params = smoke_model
+    prompts = [_prompt(37), _prompt(64, 9)]
+
+    def run(mode):
+        sched, reqs = _serve(model, params,
+                             _cfg(backend, shards, weight_stream=mode),
+                             prompts, max_new=8)
+        return sched.report(), [r.output for r in reqs]
+
+    rep_r, out_r = run("resident")
+    rep_c, out_c = run("compressed")
+    assert out_r == out_c, (backend, shards)
+    assert rep_r["weights"] == {"mode": "resident"}
+    w = rep_c["weights"]
+    assert w["mode"] == "compressed"
+    assert w["read_logical_bytes"] > 0
+    assert 0.0 < w["bandwidth_saving"] < 1.0
+    # KV accounting is untouched by the weight traffic riding the lanes
+    for key in ("kv_logical_bytes", "kv_stored_bytes", "kv_fetch_logical",
+                "kv_fetch_physical"):
+        assert rep_r[key] == rep_c[key], key
+    # the lane-budget split now has a WEIGHT_FETCH share
+    assert rep_c["engine"]["serviced_bytes"]["WEIGHT_FETCH"] > 0
+
+
+def test_ring_weight_stream_tokens_bit_identical(ring_model):
+    """Same lossless contract on the sliding-window tier."""
+    model, params = ring_model
+    prompts = [_prompt(20), _prompt(41, 5)]
+
+    def run(mode):
+        sched, reqs = _serve(
+            model, params,
+            EngineConfig(max_batch=2, max_ctx=96, backend="ring",
+                         store_layers=2, weight_stream=mode),
+            prompts, max_new=10)
+        return sched.report(), [r.output for r in reqs]
+
+    rep_r, out_r = run("resident")
+    rep_c, out_c = run("compressed")
+    assert out_r == out_c
+    assert rep_c["weights"]["bandwidth_saving"] > 0.0
+    assert (rep_c["weights"]["passes_fetched"]
+            >= rep_c["weights"]["passes_consumed"])
+
+
+def test_weight_stream_rejects_unknown_mode(smoke_model):
+    with pytest.raises(ValueError, match="weight_stream"):
+        make_backend(smoke_model[0], _cfg("paged", 1, weight_stream="mmap"))

@@ -68,6 +68,22 @@ def test_strict_priority_fetch_write_background():
     assert order == ["fetch", "write", "bg"]
 
 
+def test_weight_fetch_yields_to_decode_but_beats_writes():
+    """ISSUE 9: weight-stream layer fetches are latency-critical for the
+    NEXT step's matmuls (above writes/background) but must not starve the
+    CURRENT step's decode-critical KV fetches."""
+    rt = _runtime(step_cycles=32)  # one 2048 B job per tick
+    order = []
+    rt.submit(Job(JobClass.KV_WRITE, 2048, fn=lambda: order.append("write")))
+    rt.submit(Job(JobClass.WEIGHT_FETCH, 2048,
+                  fn=lambda: order.append("weights")))
+    rt.submit(Job(JobClass.DECODE_FETCH, 2048,
+                  fn=lambda: order.append("fetch")))
+    for _ in range(3):
+        rt.tick()
+    assert order == ["fetch", "weights", "write"]
+
+
 def test_oversized_job_carries_across_windows():
     rt = _runtime()  # 4096 B window
     done = []

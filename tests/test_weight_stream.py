@@ -1,0 +1,354 @@
+"""Weight streaming (ISSUE 9): block-compressed layer weights served
+through the memory controller.
+
+Pins the tentpole contracts: per-layer block-compressed storage with
+pad-free (exact block bytes) savings — the SAME definition offline
+Table III quotes; double-buffered layer-ahead streaming through the memctl
+lane engine at WEIGHT_FETCH priority; weight bytes charged exactly once
+per layer per step even when a tight lane budget thrashes jobs across
+windows; stalls charged to modeled latency; Table-III-ballpark bandwidth
+savings on the zstd bit-plane path; and bit-exact serving (conformance
+per-backend variants live in tests/test_kv_backend.py).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.compression import have_zstd
+from repro.configs.base import get_config
+from repro.core.bitplane import BF16
+from repro.core.compressed_store import StoreConfig, compress_weights
+from repro.core.controller import MemoryController
+from repro.core.surrogates import gaussian_weights
+from repro.memctl import (
+    CompressionEngineRuntime,
+    Job,
+    JobClass,
+    MemCtlConfig,
+    PriorityJobQueue,
+)
+from repro.models.model import build_model
+from repro.models.transformer import (
+    join_layer_params,
+    named_layer_tensors,
+    split_layer_params,
+)
+from repro.serving import ContinuousScheduler, EngineConfig, Request
+from repro.telemetry import TelemetryConfig
+from repro.weights import CompressedWeightStore, WeightStreamer
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompt(n, offset=0):
+    return ((np.arange(n) + offset) % 500).astype(np.int32)
+
+
+def _serve(model, params, cfg, prompts, max_new=8, controller=None):
+    sched = ContinuousScheduler(model, params, cfg, controller=controller)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+    sched.served = [r.output for r in reqs]
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Layer handles
+# ---------------------------------------------------------------------------
+
+
+def test_split_join_layer_params_roundtrip(smoke_model):
+    _, params = smoke_model
+    handles = split_layer_params(params)
+    assert len(handles) == 2  # smoke config
+    rejoined = join_layer_params(handles)
+    for a, b in zip(jax.tree_util.tree_leaves(rejoined),
+                    jax.tree_util.tree_leaves(params["layers"])):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# Store: pad-free sizing + the shared savings definition
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_stripe_padding(smoke_model):
+    _, params = smoke_model
+    handles = split_layer_params(params)
+    ctl = MemoryController(StoreConfig(), retain_events=False)
+    store = CompressedWeightStore.from_handles(handles, ctl)
+    assert store.n_layers == len(handles)
+    vps = ctl.config.values_per_segment
+    for li, handle in enumerate(handles):
+        peek = store.peek_layer(li)
+        for name, leaf in named_layer_tensors(handle):
+            # lossless round trip, trimmed back to the valid element count
+            assert (peek[name] == np.asarray(leaf).reshape(-1)).all(), name
+        for e in store.layer(li).entries:
+            # every tensor was padded to whole lane stripes, but its
+            # logical size is quoted pad-free
+            ct = ctl.weight_tensor(e.key)
+            assert ct.n_values % vps == 0
+            assert ct.valid_values == e.valid_values <= ct.n_values
+    # footprint agrees with the pad-free accounting
+    fp = ctl.footprint()
+    assert fp["weights_logical"] == store.valid_logical_bytes
+    assert fp["weights_saving"] == pytest.approx(store.exact_savings)
+
+
+def test_exact_savings_matches_table3_definition():
+    """Satellite: one savings definition.  The store's per-tensor savings
+    equal ``compress_weights(...).exact_savings`` on the same surrogate
+    weights (== ``.savings`` when unpadded — Table III's quote); stripe
+    padding only perturbs it by the compressed-zeros tail."""
+    w = gaussian_weights((256, 96), seed=3)
+    cfg = StoreConfig()
+    offline = compress_weights(w, BF16, cfg)
+    assert offline.exact_savings == pytest.approx(offline.savings)
+    ctl = MemoryController(cfg, retain_events=False)
+    store = CompressedWeightStore(ctl)
+    store.ingest_layer({"w": w})
+    assert store.exact_savings == pytest.approx(offline.exact_savings,
+                                                abs=0.02)
+
+
+def test_sharded_ingest_conserves_bytes(smoke_model):
+    _, params = smoke_model
+    handles = split_layer_params(params)
+    full = CompressedWeightStore.from_handles(
+        handles, MemoryController(StoreConfig(), retain_events=False))
+    parts = [
+        CompressedWeightStore.from_handles(
+            handles, MemoryController(StoreConfig(), retain_events=False),
+            part=(i, 2))
+        for i in range(2)
+    ]
+    assert (sum(p.valid_logical_bytes for p in parts)
+            == full.valid_logical_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Priority: WEIGHT_FETCH sits between decode fetches and KV writes
+# ---------------------------------------------------------------------------
+
+
+def test_weight_fetch_priority_tier():
+    q = PriorityJobQueue()
+    order = []
+    for klass in (JobClass.BACKGROUND, JobClass.KV_WRITE,
+                  JobClass.WEIGHT_FETCH, JobClass.DECODE_FETCH):
+        q.push(Job(klass, 8, fn=lambda k=klass: order.append(k)))
+    popped = [q.pop().klass for _ in range(4)]
+    assert popped == [JobClass.DECODE_FETCH, JobClass.WEIGHT_FETCH,
+                      JobClass.KV_WRITE, JobClass.BACKGROUND]
+
+
+# ---------------------------------------------------------------------------
+# Streamer: double buffering, exactly-once, stalls
+# ---------------------------------------------------------------------------
+
+
+def _surrogate_store(n_layers=2, shape=(128, 96), codec=None):
+    cfg = StoreConfig() if codec is None else StoreConfig(codec=codec)
+    ctl = MemoryController(cfg, retain_events=True)
+    store = CompressedWeightStore(ctl)
+    for li in range(n_layers):
+        store.ingest_layer({"w": gaussian_weights(shape, seed=li)})
+    return store, ctl
+
+
+def test_streamer_double_buffers_one_pass_ahead():
+    store, ctl = _surrogate_store()
+    eng = CompressionEngineRuntime()  # default budget: everything fits
+    ws = WeightStreamer(store, eng)
+    for step in range(1, 4):
+        ws.begin_pass()
+        eng.tick()
+        ws.window_close()
+        rep = ws.report()
+        assert rep["passes_consumed"] == step
+        # the prefetched NEXT pass is serviced alongside the current one
+        assert rep["passes_fetched"] == step + 1
+        assert rep["stall_steps"] == 0
+    # exactly once per layer per fetched pass
+    assert ctl.stats.kind_count("weight_read") == 4 * store.n_layers
+
+
+def test_streamer_depth_zero_fetches_cold():
+    store, _ = _surrogate_store()
+    eng = CompressionEngineRuntime()
+    ws = WeightStreamer(store, eng, prefetch_depth=0)
+    ws.begin_pass()
+    eng.tick()
+    ws.window_close()
+    rep = ws.report()
+    assert rep["prefetch_depth"] == 0
+    assert rep["passes_fetched"] == rep["passes_consumed"] == 1
+
+
+def test_streamer_stalls_under_tight_budget():
+    """A lane window too small for a full weight pass leaves current-pass
+    layers pending at window close: stalls are counted and charged ns."""
+    store, _ = _surrogate_store()
+    eng = CompressionEngineRuntime(MemCtlConfig(step_cycles=8))
+    ws = WeightStreamer(store, eng)
+    ws.begin_pass()
+    eng.tick()
+    ns = ws.window_close()
+    rep = ws.report()
+    assert rep["stall_steps"] == 1
+    assert rep["stall_layers"] >= 1
+    assert ns > 0 and rep["stall_ns"] == pytest.approx(ns)
+
+
+def test_weight_bytes_charged_once_per_layer_per_step_under_thrash(
+        smoke_model):
+    """Satellite: lane-budget thrash (a window far smaller than one weight
+    pass) defers weight jobs across step windows, but every fetched pass
+    still charges each layer exactly once — no duplicate charging from
+    re-submission, no lost layers."""
+    model, params = smoke_model
+    ctl = MemoryController(StoreConfig(), retain_events=True)
+    cfg = EngineConfig(
+        max_batch=2, max_ctx=128, store_layers=2,
+        weight_stream="compressed",
+        engine=MemCtlConfig(step_cycles=256),  # 256 KiB/window << one pass
+    )
+    sched = _serve(model, params, cfg, [_prompt(21), _prompt(33, 5)],
+                   controller=ctl)
+    rep = sched.report()
+    w = rep["weights"]
+    n_layers = w["n_layers"]
+    reads = [e for e in ctl.stats.events if e.kind == "weight_read"]
+    per_layer: dict = {}
+    for e in reads:
+        li = e.name.split("/", 1)[0]
+        per_layer[li] = per_layer.get(li, 0) + 1
+    assert len(per_layer) == n_layers
+    # every layer charged the same number of times == passes fetched
+    # (tensor count per layer divides out: count passes via distinct names)
+    tensors_per_layer = len({e.name for e in reads}) // n_layers
+    counts = {li: c // tensors_per_layer for li, c in per_layer.items()}
+    assert len(set(counts.values())) == 1
+    assert counts.popitem()[1] == w["passes_fetched"]
+    # drain completed every submitted pass; prefetch tail is at most one
+    assert w["passes_consumed"] <= w["passes_fetched"] \
+        <= w["passes_consumed"] + 1
+    # the tight window stalled compute, and the stall reached modeled time
+    assert w["stall_steps"] > 0 and w["stall_ns"] > 0
+    assert (sched.backend.engine_time_ns()
+            > max(t.engine.clock.elapsed_ns for t in sched.backend.tiers))
+
+
+# ---------------------------------------------------------------------------
+# Savings ballpark + config plumbing + telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_serving_weight_bandwidth_saving_ballpark(smoke_model):
+    """report()['weights'] quotes a real bandwidth saving on the default
+    (lz4 fallback) codec — the loose band; the paper-ballpark band is
+    pinned on zstd below."""
+    model, params = smoke_model
+    sched = _serve(model, params,
+                   EngineConfig(max_batch=2, max_ctx=128, store_layers=2,
+                                weight_stream="compressed"),
+                   [_prompt(30)])
+    w = sched.report()["weights"]
+    assert 0.10 < w["bandwidth_saving"] < 0.45
+    assert w["bandwidth_saving"] == pytest.approx(
+        1 - w["read_physical_bytes"] / w["read_logical_bytes"])
+
+
+@pytest.mark.skipif(not have_zstd(),
+                    reason="optional zstandard package not installed")
+def test_zstd_weight_saving_in_paper_ballpark(smoke_model):
+    """Acceptance: zstd bit-plane surrogate weights stream in the paper's
+    25.2% ballpark, offline store and serving report agreeing."""
+    store, ctl = _surrogate_store(shape=(512, 96), codec="zstd")
+    assert 0.18 <= store.exact_savings <= 0.35
+    model, params = smoke_model
+    sched = _serve(model, params,
+                   EngineConfig(max_batch=2, max_ctx=128, store_layers=2,
+                                codec="zstd", weight_stream="compressed"),
+                   [_prompt(30)])
+    w = sched.report()["weights"]
+    assert 0.18 <= w["bandwidth_saving"] <= 0.35
+    assert w["bandwidth_saving"] == pytest.approx(w["capacity_saving"])
+
+
+def test_engine_config_honours_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_WEIGHT_STREAM", "compressed")
+    assert EngineConfig().weight_stream == "compressed"
+    monkeypatch.delenv("REPRO_WEIGHT_STREAM")
+    assert EngineConfig().weight_stream == "resident"
+
+
+def test_resident_mode_has_no_weight_traffic(smoke_model):
+    model, params = smoke_model
+    ctl = MemoryController(StoreConfig(), retain_events=True)
+    sched = _serve(model, params,
+                   EngineConfig(max_batch=2, max_ctx=128, store_layers=2,
+                                weight_stream="resident"),
+                   [_prompt(25)], controller=ctl)
+    assert ctl.stats.kind_count("weight_read") == 0
+    assert ctl.stats.kind_count("weight_write") == 0
+    assert sched.report()["weights"] == {"mode": "resident"}
+
+
+def test_weight_events_reach_telemetry_and_trace(smoke_model, tmp_path):
+    from repro.telemetry.perfetto import write_perfetto_trace
+
+    model, params = smoke_model
+    sched = _serve(model, params,
+                   EngineConfig(max_batch=2, max_ctx=128, store_layers=2,
+                                weight_stream="compressed",
+                                telemetry=TelemetryConfig()),
+                   [_prompt(28)])
+    tel = sched.telemetry
+    assert tel.counts["weight_fetches"] > 0
+    assert tel.counts["weight_fetches"] == len(tel.weight_events)
+    # streamer instants land on the (validated) lane timeline
+    trace = write_perfetto_trace(tel, str(tmp_path / "trace.json"))
+    weights = [e for e in trace["traceEvents"]
+               if e.get("cat") == "weights"]
+    assert len(weights) == tel.counts["weight_fetches"]
+    cycles = [e for (_, _, _, e, _, _) in tel.weight_events]
+    assert all(c >= 0 for c in cycles)
+
+
+def test_ladder_decode_streams_bit_identically(smoke_model):
+    """Weight streaming composes with the precision ladder + bit-plane
+    device path: tokens stay bit-identical to the resident run with the
+    SAME ladder (weight traffic must not perturb KV fetch scheduling)."""
+    from repro.core.quantization import PrecisionLadder
+
+    model, params = smoke_model
+    ladder = PrecisionLadder([(2, 16), (2, 8), (-1, 4)])
+
+    def run(mode):
+        return _serve(
+            model, params,
+            EngineConfig(max_batch=2, max_ctx=128, store_layers=2,
+                         ladder=ladder, device_kv="bitplane",
+                         weight_stream=mode),
+            [_prompt(37), _prompt(52, 3)], max_new=6)
+
+    sched_r = run("resident")
+    sched_c = run("compressed")
+    assert sched_r.served == sched_c.served
+    rep_r = sched_r.report()
+    rep_c = sched_c.report()
+    assert rep_r["kv_fetch_physical"] == rep_c["kv_fetch_physical"]
+    assert rep_r["device_bytes_read"] == rep_c["device_bytes_read"]
