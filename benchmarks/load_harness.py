@@ -1,0 +1,154 @@
+"""Trace-driven multi-tenant load harness (ISSUE 10).
+
+Replays deterministic synthetic traces (``repro.serving.traces``) against
+the continuous scheduler with prefix sharing ON, telemetry ON and
+admission shedding armed, then grades each trace against TTFT/TPOT SLO
+quantiles (the ISSUE 7 latency report):
+
+* **traffic** — heterogeneous request classes (chat with shared system
+  prompts, long-doc summarization, agentic tool loops) under a choice of
+  arrival processes: ``poisson`` (steady), ``diurnal`` (peak/trough),
+  ``bursty`` (thundering herds);
+* **SLO grading** — attained TTFT/TPOT p50/p99 (modeled engine clock, the
+  deterministic domain) against per-quantile targets; each trace row says
+  PASS/miss per objective.  Wall-clock quantiles are reported too but
+  never graded — CI machines make them noise;
+* **shedding** — ``EngineConfig.shed_latency_ns_max`` rejects arrivals at
+  submit when the modeled engine backlog already exceeds the bound;
+  ``requests_shed`` per trace shows the policy working under burst;
+* **prefix economics** — ``report()["prefix"]``: hit ratio, pages
+  shared, bytes deduplicated, prefill chunks skipped.
+
+    PYTHONPATH=src python -m benchmarks.run --only load_harness
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import fmt_table
+
+#: default SLO targets on the MODELED engine clock (ns).  The smoke model
+#: under smoke traffic sits comfortably inside these; a saturated bursty
+#: trace shows up as a p99 miss, which is exactly the point of grading.
+DEFAULT_SLO = {
+    "ttft_engine_ns": {"p50": 2.0e6, "p99": 2.0e7},
+    "tpot_engine_ns": {"p50": 1.0e6, "p99": 1.0e7},
+}
+
+
+def _drive(model, params, cfg, trace, max_steps=None):
+    """Arrival-driven replay: submit each item once the scheduler clock
+    reaches its arrival step, then drain."""
+    from repro.serving import ContinuousScheduler, Request
+
+    warm = ContinuousScheduler(model, params, cfg)
+    warm.submit(Request(rid=10 ** 6, prompt=np.arange(16, dtype=np.int32),
+                        max_new_tokens=4))
+    warm.run_until_drained(60)
+
+    sched = ContinuousScheduler(model, params, cfg)
+    nxt = 0
+    while nxt < len(trace) or sched.has_work():
+        if max_steps is not None and sched.step_count >= max_steps:
+            break
+        while (nxt < len(trace)
+               and trace[nxt].arrival_step <= sched.step_count):
+            sched.submit(trace[nxt].request)
+            nxt += 1
+        sched.step()
+    return sched.report()
+
+
+def _grade(latency, slo):
+    """Per-objective attainment: (metric, quantile, attained, target, ok)."""
+    rows = []
+    for metric, targets in slo.items():
+        q = latency[metric]
+        for quant, target in targets.items():
+            rows.append((metric, quant, q[quant], target,
+                         q[quant] <= target))
+    return rows
+
+
+def run(n_requests: int = 24, rate: float = 0.5, seed: int = 0,
+        kinds=("poisson", "diurnal", "bursty"),
+        max_steps: int | None = None, slo: dict | None = None,
+        shed_latency_ns_max: float = 5.0e7,
+        json_path: str | None = None):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    from repro.serving import EngineConfig, TelemetryConfig, make_trace
+
+    slo = DEFAULT_SLO if slo is None else slo
+    cfg_m = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg_m)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = EngineConfig(
+        max_batch=4, max_ctx=256, store_layers=2,
+        prefix_sharing=True,
+        shed_latency_ns_max=shed_latency_ns_max,
+        telemetry=TelemetryConfig(lane_timeline=False),
+    )
+
+    out, rows = {}, []
+    for kind in kinds:
+        trace = make_trace(n_requests, kind=kind, rate=rate, seed=seed,
+                           max_ctx=cfg.max_ctx)
+        rep = _drive(model, params, cfg, trace, max_steps=max_steps)
+        lat, px = rep["latency"], rep["prefix"]
+        graded = _grade(lat, slo)
+        misses = [f"{m}.{q}" for m, q, _, _, ok in graded if not ok]
+        out[kind] = {
+            "requests": lat["requests"],
+            "requests_shed": rep["requests_shed"],
+            "latency": {m: lat[m] for m in
+                        ("ttft_wall_ns", "ttft_engine_ns",
+                         "tpot_wall_ns", "tpot_engine_ns")},
+            "slo": [{"metric": m, "quantile": q, "attained_ns": a,
+                     "target_ns": t, "ok": ok}
+                    for m, q, a, t, ok in graded],
+            "slo_misses": misses,
+            "prefix": px,
+        }
+        rows.append([
+            kind, str(lat["requests"]), str(rep["requests_shed"]),
+            f"{lat['ttft_engine_ns']['p50']:.2e}",
+            f"{lat['ttft_engine_ns']['p99']:.2e}",
+            f"{lat['tpot_engine_ns']['p99']:.2e}",
+            f"{px['hit_ratio']:.2f}", str(px["requests_matched"]),
+            f"{px['bytes_deduplicated']}",
+            "PASS" if not misses else ",".join(misses),
+        ])
+
+    print(fmt_table(rows, ["arrivals", "served", "shed", "ttft p50",
+                           "ttft p99", "tpot p99", "hit ratio", "matched",
+                           "dedup B", "SLO"]))
+    # the harness's structural claims: every trace produced a latency
+    # report and a prefix report; the chat-heavy mix shared at least one
+    # prefix somewhere across the traces (wave-2 arrivals match)
+    assert all(v["requests"] > 0 for v in out.values()), out
+    assert sum(v["prefix"]["requests_matched"] for v in out.values()) > 0, \
+        "no trace produced a single prefix hit — sharing is not engaging"
+    print("[load_harness] prefix sharing engaged; SLO grading is on the "
+          "modeled engine clock (wall quantiles reported, never graded)")
+
+    if json_path is not None:
+        merged = {}
+        if os.path.exists(json_path):
+            with open(json_path) as fh:
+                merged = json.load(fh)
+        merged["load_harness"] = out
+        with open(json_path, "w") as fh:
+            json.dump(merged, fh, indent=1)
+        print(f"[load_harness] merged into {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

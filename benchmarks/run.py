@@ -54,6 +54,17 @@ MODULES = [
       # merges its rows INTO serving_bitplane's BENCH_serving.json (runs
       # after it, read-modify-write) — same artifact, one more key
       "artifact": ["BENCH_serving.json"]}),
+    ("serving_prefix", "benchmarks.serving_prefix",
+     {"fast": dict(n_requests=12, max_steps=400),
+      "smoke": dict(n_requests=8, share_factors=(1, 4), max_steps=300),
+      # merges its shared-vs-cold rows INTO BENCH_serving.json under a
+      # "prefix" key (runs after serving_weight_stream, read-modify-write)
+      "artifact": ["BENCH_serving.json"]}),
+    ("load_harness", "benchmarks.load_harness",
+     {"fast": dict(n_requests=16, max_steps=600),
+      "smoke": dict(n_requests=10, kinds=("poisson", "bursty"),
+                    max_steps=400),
+      "artifact": ["BENCH_serving.json"]}),
     ("kernel_bw", "benchmarks.kernel_bandwidth", {}),
     ("roofline", "benchmarks.roofline", {}),
 ]

@@ -161,3 +161,63 @@ class AccountingWeightStream(Rule):
                             f"[{tgt.slice.value!r}] outside the weight "
                             f"subsystem — streamer counters own these",
                         )
+
+
+#: modules allowed to mutate page refcounts / drop shared pages: the page
+#: store that owns the refcount table, the backends that bind/release
+#: prefix pages through its API, and the accounting core
+_PREFIX_ALLOWED = (
+    "repro/serving/kv_cache.py",
+    "repro/serving/backends/",
+    "repro/memctl/",
+    "repro/core/",
+)
+#: the store's page-lifecycle mutators — outside the allowed set, calling
+#: one detaches a page's refcount from the bindings the backends track
+_REFCOUNT_MUTATORS = {"drop_page", "retain_page", "release_page"}
+
+
+@register
+class AccountingPrefixRefcount(Rule):
+    """Shared-prefix page lifecycle is store/backend-internal (ISSUE 10):
+    outside ``serving/kv_cache.py`` and ``serving/backends/``, code must
+    not call ``drop_page``/``retain_page``/``release_page`` or write the
+    store's ``_refcounts`` table directly — a refcount mutated behind the
+    backends' backs either evicts a page a live request is bound to or
+    pins one forever, and the dedup ledger (``bytes_deduplicated``,
+    ``shared_stored_bytes``) silently diverges from residency."""
+
+    name = "accounting-prefix-refcount"
+
+    def applies(self, path: str) -> bool:
+        return ("src/repro/" in path
+                and not any(allow in path for allow in _PREFIX_ALLOWED))
+
+    def check(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _REFCOUNT_MUTATORS):
+                label = ".".join(attr_chain(node.func))
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"page-lifecycle call {label}() outside the page "
+                    f"store/backends — refcounted shared pages may only "
+                    f"be bound and dropped through the backend API",
+                )
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    # both x._refcounts = ... and x._refcounts[k] += 1
+                    attr = (tgt.value if isinstance(tgt, ast.Subscript)
+                            else tgt)
+                    if (isinstance(attr, ast.Attribute)
+                            and attr.attr == "_refcounts"):
+                        yield Finding(
+                            self.name, mod.path, tgt.lineno,
+                            tgt.col_offset,
+                            "direct _refcounts write outside the page "
+                            "store — the refcount table is owned by "
+                            "CompressedKVStore",
+                        )

@@ -16,6 +16,12 @@ from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F
 from repro.serving.kv_cache import CompressedKVStore, PageEvictedError  # noqa: F401
 from repro.serving.sampler import SamplerConfig, sample  # noqa: F401
 from repro.serving.scheduler import ContinuousScheduler  # noqa: F401
+from repro.serving.traces import (  # noqa: F401
+    DEFAULT_CLASSES,
+    RequestClass,
+    TraceItem,
+    make_trace,
+)
 from repro.telemetry import (  # noqa: F401
     TelemetryConfig,
     prometheus_snapshot,

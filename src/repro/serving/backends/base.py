@@ -67,7 +67,11 @@ from repro.serving.kv_cache import (
     CompressedKVStore,
     PageEvictedError,
     PageKey,
+    PrefixEntry,
+    PrefixIndex,
     iter_page_chunks,
+    page_chain_hashes,
+    prefix_seq_id,
 )
 from repro.telemetry.collector import NULL_COLLECTOR
 
@@ -76,6 +80,8 @@ BACKEND_STATS = (
     "kv_fetch_misses", "kv_fetch_deferrals", "kv_reactivations",
     "engine_jobs_cancelled", "kv_peak_stored_bytes", "kv_peak_logical_bytes",
     "device_bytes_read",
+    "prefix_requests_matched", "prefix_tokens_matched",
+    "prefix_pages_matched", "prefix_bytes_deduped",
 )
 
 
@@ -102,6 +108,21 @@ class SlotState:
     #: slot's staging ring — main cache holds [0, stage_base), the ring
     #: holds [stage_base, len); mirrors the device 'sbase' row
     stage_base: int = 0
+    # --- shared-prefix state (EngineConfig.prefix_sharing; empty = cold) ---
+    #: chain hash per FULL prompt page — page p < prompt_pages is keyed
+    #: ``px:<hash[p]>`` instead of the rid (CONTENT addressing), so equal
+    #: prefixes share store pages; tail/decode pages stay rid-keyed
+    prefix_hashes: List[str] = dataclasses.field(default_factory=list)
+    #: raw prompt ids the hashes digest (registration stores them so a
+    #: match can verify token equality, not just hash equality)
+    prefix_tokens: Optional[np.ndarray] = None
+    #: number of FULL prompt pages (== len(prefix_hashes))
+    prompt_pages: int = 0
+    #: pages [bound_from_page, shared_pages) were adopted via a prefix
+    #: match and hold a store refcount each; released at retire, or as a
+    #: ring window slides past them (advancing bound_from_page)
+    shared_pages: int = 0
+    bound_from_page: int = 0
 
 
 class MemTier:
@@ -150,7 +171,7 @@ class MemTier:
 
 def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
                    key: PageKey, seq_key, device_kv: str = "dense",
-                   telemetry=None) -> Job:
+                   telemetry=None, rid=None, keep_fn=None) -> Job:
     """Decode-critical fetch with SERVICE-TIME sizing.
 
     The plane count is resolved exactly once — by ``size_fn`` when the
@@ -166,19 +187,28 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
     charged — the accounting-vs-device gap the bit-plane layout closes.
 
     With a live ``telemetry`` collector, every serviced fetch is attributed
-    to its request (``key.seq_id``) in BOTH byte currencies: the device
-    bytes above (sums to the backend's ``device_bytes_read``) and the
-    controller's plane-scaled kv_read delta (sums to the controller
-    totals) — the per-request breakdown of the two bandwidth claims.
+    to its request in BOTH byte currencies: the device bytes above (sums to
+    the backend's ``device_bytes_read``) and the controller's plane-scaled
+    kv_read delta (sums to the controller totals) — the per-request
+    breakdown of the two bandwidth claims.  ``rid`` names that request
+    explicitly; it defaults to ``key.seq_id``, which shared-prefix
+    (content-addressed) keys no longer carry.
+
+    ``keep_fn`` resolves the plane count from the FETCHING slot's ladder
+    assignment at service time (shared pages: every holder ranks the page
+    against its own query, so the store's last-writer hint is the wrong
+    holder's); None keeps the store's ladder hint as before.
     """
     plan: dict = {}
     telemetry = telemetry if telemetry is not None else NULL_COLLECTOR
+    rid = key.seq_id if rid is None else rid
 
     def size() -> int:
         if not store.contains(key):
             store.note_miss()  # keep the store's counters honest too
             return 0  # evicted since submit; fn counts the scheduler miss
-        nbytes, keep = store.fetch_plan(key)
+        keep = "ladder" if keep_fn is None else keep_fn()
+        nbytes, keep = store.fetch_plan(key, keep)
         plan["keep"] = keep
         plan["device"] = (nbytes if device_kv == "bitplane"
                           else store.page_logical_bytes(key))
@@ -204,7 +234,7 @@ def make_fetch_job(store: CompressedKVStore, stats: Dict[str, float],
         if live:
             delta = (store.controller.stats.kind_device_bytes("kv_read")
                      - before)
-            telemetry.on_fetch(key.seq_id, plan["device"], delta)
+            telemetry.on_fetch(rid, plan["device"], delta)
 
     return Job(JobClass.DECODE_FETCH, 0, fn=fn, key=key.astuple(),
                seq_id=seq_key, size_fn=size)
@@ -241,6 +271,12 @@ class KVBackend(abc.ABC):
             )
         self.streamers: list = []
         self._weight_pass_pending = False
+        # shared-prefix index (ISSUE 10): None = sharing off, every page
+        # rid-keyed, bit- and accounting-identical to the pre-prefix code
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(getattr(cfg, "prefix_index_entries", 128))
+            if getattr(cfg, "prefix_sharing", False) else None
+        )
 
     # ------------------------------------------------------------ validation
     @classmethod
@@ -424,14 +460,18 @@ class KVBackend(abc.ABC):
         cap = self.cfg.store_layers
         return n_layers if cap is None else min(cap, n_layers)
 
-    def slot_kv_host(self, slot_id: int, t0: int, t1: int):
+    def slot_kv_host(self, slot_id: int, t0: int, t1: int,
+                     layers: Optional[int] = None):
         """Device->host copy of this slot's KV rows [t0, t1) for the stored
         layers, flattened to (L_stored, tokens, channels) bf16.  The
         bit-plane layout unpacks at full precision first — packing is a
-        bf16 bitcast, so the copy is bit-identical to the dense layout's."""
+        bf16 bitcast, so the copy is bit-identical to the dense layout's.
+        ``layers`` overrides the layer count (prefix-index snapshots copy
+        ALL layers: adoption rebuilds the whole device column, not just the
+        compressed-store's capped subset)."""
         import ml_dtypes
 
-        ls = self.stored_layers()
+        ls = self.stored_layers() if layers is None else layers
         rows = self._device_rows(t0, t1)
         t = t1 - t0
         if self.device_kv == "bitplane":
@@ -481,14 +521,176 @@ class KVBackend(abc.ABC):
         pages.  Eviction write-backs carry ``seq_id=None`` and survive: the
         stream-out is committed work the drain loop services.  Returns the
         number of cancelled jobs (also accumulated on the stats dict)."""
+        st = self._slots.get(slot_id)
+        if st is not None:
+            self._release_prefix(st)
         cancelled = 0
         for tier in self.tiers:
             cancelled += tier.engine.cancel_seq(self._seq_key(tier, rid))
+            # shared (px:) pages are untouched: drop_sequence matches the
+            # integer rid only — the prefix cache outlives its writers
             tier.store.drop_sequence(rid)
         self.stats["engine_jobs_cancelled"] += cancelled
         self._slots.pop(slot_id, None)
         self._reset_device_planes(slot_id)
         return cancelled
+
+    # --------------------------------------------------------- prefix sharing
+    def _slot_key(self, st: SlotState, layer: int, page_idx: int,
+                  stream: str) -> PageKey:
+        """Store key for one of this slot's pages: content-addressed while
+        the page is a hashed FULL prompt page (sharing on), rid-keyed
+        otherwise (sharing off, ragged prompt tails, decode appends)."""
+        if st.prefix_hashes and page_idx < st.prompt_pages:
+            return PageKey(prefix_seq_id(st.prefix_hashes[page_idx]),
+                           layer, page_idx, stream)
+        return PageKey(st.rid, layer, page_idx, stream)
+
+    def _prefix_adopt_lo(self, m: int) -> int:
+        """First device row a slot adopting an ``m``-token prefix must
+        rebuild (ring windows only reach back ``window`` tokens)."""
+        return 0
+
+    def _prefix_register_ok(self, st: SlotState, end: int) -> bool:
+        """Whether a finished prefill can be indexed for sharing (ring:
+        only while the WHOLE prompt is still inside the window — a prefix
+        partially slid out has no device rows left to snapshot)."""
+        return True
+
+    def match_prefix(self, slot_id: int, prompt: np.ndarray) -> int:
+        """Longest indexed page-aligned shared prefix this slot can adopt;
+        binds the matched pages by refcount, copies the donor's device rows
+        into the slot, and returns the matched token count (0 = cold).
+        Called once per slot at its first prefill tick; also the point
+        where the slot's page hashes are computed, so even a cold slot
+        writes its full prompt pages content-addressed (becoming a donor).
+
+        The match is capped one page short of the prompt (at least one
+        token always prefills: the final chunk's logits drive sampling
+        draw 0, so a matched request keeps the exact fold_in(base, rid)
+        stream a cold prefill would have used)."""
+        if self.prefix is None or not self.cfg.store_kv_compressed:
+            return 0
+        st = self._slots[slot_id]
+        arr = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        hashes = page_chain_hashes(arr)
+        st.prefix_hashes = hashes
+        st.prefix_tokens = arr
+        st.prompt_pages = len(hashes)
+        if not hashes:
+            return 0
+        cap = (len(arr) - 1) // PAGE_TOKENS
+        m_pages, entry = self.prefix.match(arr, hashes, max_pages=cap)
+        while m_pages > 0:
+            m = m_pages * PAGE_TOKENS
+            lo = self._prefix_adopt_lo(m)
+            if lo < entry.r0_token:
+                return 0  # donor snapshot no longer covers the window start
+            bind_from = -(-lo // PAGE_TOKENS)
+            missing = self._first_missing_prefix_page(hashes, bind_from,
+                                                      m_pages)
+            if missing is None:
+                break
+            if missing <= bind_from:
+                return 0  # nothing resident to bind
+            m_pages = missing  # truncate to the resident prefix and retry
+        else:
+            return 0
+        self._adopt_prefix_rows(slot_id, entry, lo, m)
+        st.stored_tokens = m
+        st.live_from_page = bind_from
+        st.bound_from_page = bind_from
+        st.shared_pages = m_pages
+        deduped = 0
+        for p in range(bind_from, m_pages):
+            for li in range(self.stored_layers()):
+                for stream in ("k", "v"):
+                    key = self._slot_key(st, li, p, stream)
+                    for tier, _cols in self._page_targets(key):
+                        tier.store.retain_page(key)
+                        deduped += tier.store.page_stored_bytes(key)
+        self.stats["prefix_requests_matched"] += 1
+        self.stats["prefix_tokens_matched"] += m
+        self.stats["prefix_pages_matched"] += m_pages - bind_from
+        self.stats["prefix_bytes_deduped"] += deduped
+        if self.telemetry.enabled:
+            self.telemetry.on_prefill_chunk(st.rid, 0, m, False)
+        return m
+
+    def _first_missing_prefix_page(self, hashes: List[str], p0: int,
+                                   p1: int) -> Optional[int]:
+        """First page in [p0, p1) not resident on EVERY owning tier (a
+        queued-but-unserviced donor write counts as missing — there is no
+        compressed copy to bind yet), or None when all are resident."""
+        for p in range(p0, p1):
+            for li in range(self.stored_layers()):
+                for stream in ("k", "v"):
+                    key = PageKey(prefix_seq_id(hashes[p]), li, p, stream)
+                    for tier, _cols in self._page_targets(key):
+                        if not tier.store.contains(key):
+                            return p
+        return None
+
+    def _adopt_prefix_rows(self, slot_id: int, entry: PrefixEntry,
+                           lo: int, m: int) -> None:
+        """Copy the donor snapshot's device rows [lo, m) into this slot —
+        a device-internal copy (like legacy ``adopt_prefill``), charged to
+        neither the lane engine nor the controller: the whole point is
+        that no compress/prefill work runs for adopted rows.  Snapshots
+        are bf16 and bit-plane packing is a bf16 bitcast, so the adopted
+        rows are bit-identical to a cold prefill's."""
+        cache = self.ensure_cache()
+        t = m - lo
+        o = lo - entry.r0_token
+        hkv, hd = self.mcfg.n_kv_heads, self.mcfg.head_dim
+        n_layers = entry.k.shape[0]
+        rows = self._device_rows(lo, m)
+        if self.device_kv == "bitplane":
+            from repro.kernels.paged_attention.ops import pack_kv_planes
+
+            for name, arr in (("k_planes", entry.k), ("v_planes", entry.v)):
+                dense = jnp.asarray(arr[:, o:o + t]).reshape(
+                    n_layers, t, hkv, hd
+                )
+                packed = jnp.moveaxis(pack_kv_planes(dense), 0, 1)
+                cache[name] = cache[name].at[:, :, slot_id, rows].set(packed)
+            return
+        for name, arr in (("k", entry.k), ("v", entry.v)):
+            dense = jnp.asarray(arr[:, o:o + t]).reshape(
+                n_layers, t, hkv, hd
+            ).astype(cache[name].dtype)
+            cache[name] = cache[name].at[:, slot_id, rows].set(dense)
+
+    def _register_prefix(self, slot_id: int, end: int) -> None:
+        """Index a finished prefill's full prompt pages for future sharing
+        (skipped when every page hash is already covered — re-snapshotting
+        an indexed prefix would only churn host memory)."""
+        if self.prefix is None:
+            return
+        st = self._slots[slot_id]
+        n_pages = st.prompt_pages
+        if (n_pages == 0 or st.prefix_tokens is None
+                or not self._prefix_register_ok(st, end)):
+            return
+        if all(self.prefix.has_page(h) for h in st.prefix_hashes):
+            return
+        t1 = n_pages * PAGE_TOKENS
+        k, v = self.slot_kv_host(slot_id, 0, t1, layers=self.mcfg.n_layers)
+        self.prefix.register(PrefixEntry(
+            tokens=st.prefix_tokens[:t1].copy(), hashes=list(st.prefix_hashes),
+            r0_token=0, k=np.asarray(k), v=np.asarray(v),
+        ))
+
+    def _release_prefix(self, st: SlotState) -> None:
+        """Drop this slot's remaining shared-page bindings (retire, or a
+        ring window sliding past them)."""
+        for p in range(st.bound_from_page, st.shared_pages):
+            for li in range(self.stored_layers()):
+                for stream in ("k", "v"):
+                    key = self._slot_key(st, li, p, stream)
+                    for tier, _cols in self._page_targets(key):
+                        tier.store.release_page(key)
+        st.bound_from_page = st.shared_pages
 
     # ---------------------------------------------------------- page traffic
     def on_prefill_progress(self, slot_id: int, end: int, final: bool) -> None:
@@ -516,6 +718,7 @@ class KVBackend(abc.ABC):
             st.stored_tokens = hi
         if final:
             self._assign_ladder_planes(slot_id, end)
+            self._register_prefix(slot_id, end)
 
     def on_decode_token(self, slot_id: int, ln: int) -> None:
         """One decode token landed at position ln-1: store the page if it
@@ -568,7 +771,8 @@ class KVBackend(abc.ABC):
             for stream, kv in (("k", k_np[li]), ("v", v_np[li])):
                 for p, chunk, valid in iter_page_chunks(kv, first_page):
                     self._submit_page_write(
-                        slot_id, PageKey(st.rid, li, p, stream), chunk, valid
+                        slot_id, self._slot_key(st, li, p, stream),
+                        chunk, valid
                     )
 
     def _submit_page_write(self, slot_id: int, key: PageKey,
@@ -607,7 +811,11 @@ class KVBackend(abc.ABC):
         for li in range(self.stored_layers()):
             for stream in ("k", "v"):
                 for p in range(p0, n_pages):
-                    key = PageKey(rid, li, p, stream)
+                    key = self._slot_key(st, li, p, stream)
+                    # shared pages fetch at THIS holder's ladder assignment
+                    # (the store hint is whichever holder re-ranked last)
+                    keep_fn = (None if key.seq_id == rid
+                               else lambda st=st, p=p: st.page_planes.get(p))
                     kt = key.astuple()
                     reactivate = []
                     for tier, cols in self._page_targets(key):
@@ -617,6 +825,7 @@ class KVBackend(abc.ABC):
                                 self._seq_key(tier, rid),
                                 device_kv=self.device_kv,
                                 telemetry=self.telemetry,
+                                rid=rid, keep_fn=keep_fn,
                             ))
                         elif (tier.engine.pending(kt, JobClass.KV_WRITE)
                               or tier.engine.pending(kt, JobClass.BACKGROUND)):
@@ -750,7 +959,7 @@ class KVBackend(abc.ABC):
             st.page_planes[p] = keep
             for li in range(self.stored_layers()):
                 for stream in ("k", "v"):
-                    key = PageKey(st.rid, li, p, stream)
+                    key = self._slot_key(st, li, p, stream)
                     for tier, _cols in self._page_targets(key):
                         tier.store.set_planes(key, keep)
         if self.telemetry.enabled:
@@ -876,7 +1085,42 @@ class KVBackend(abc.ABC):
         # (pad-free) block bytes — the same definition Table III quotes —
         # next to KV's, plus streamer stall exposure
         s["weights"] = self._weights_report()
+        # shared-prefix traffic (ISSUE 10): hit ratio, dedup ledger,
+        # resident shared footprint
+        s["prefix"] = self._prefix_report()
         return s
+
+    def _prefix_report(self) -> dict:
+        pr: dict = {"enabled": self.prefix is not None}
+        if self.prefix is None:
+            return pr
+        shared_pages = shared_bytes = bound = shared_evs = 0
+        for tier in self.tiers:
+            fp = tier.store.footprint()
+            shared_pages += fp["shared_pages"]
+            shared_bytes += fp["shared_stored_bytes"]
+            bound += fp["bound_pages"]
+            shared_evs += fp["shared_evictions"]
+        matched = self.stats.get("prefix_tokens_matched", 0)
+        prefilled = self.stats.get("prefill_tokens", 0)
+        pr.update({
+            "requests_matched": self.stats.get("prefix_requests_matched", 0),
+            "tokens_matched": matched,
+            "pages_matched": self.stats.get("prefix_pages_matched", 0),
+            "bytes_deduplicated": self.stats.get("prefix_bytes_deduped", 0),
+            "prefill_chunks_skipped":
+                self.stats.get("prefill_chunks_skipped", 0),
+            # matched tokens never prefill, so matched/(matched+prefilled)
+            # is the fraction of prompt work the index absorbed
+            "hit_ratio": (matched / (matched + prefilled)
+                          if matched + prefilled else 0.0),
+            "index_entries": len(self.prefix),
+            "resident_shared_pages": shared_pages,
+            "resident_shared_bytes": shared_bytes,
+            "bound_pages": bound,
+            "shared_evictions": shared_evs,
+        })
+        return pr
 
     def _weights_report(self) -> dict:
         w: dict = {"mode": self.cfg.weight_stream}

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.backends.base import KVBackend, SlotState
-from repro.serving.kv_cache import PAGE_TOKENS, PageKey
+from repro.serving.kv_cache import PAGE_TOKENS
 
 
 class RingBackend(KVBackend):
@@ -124,19 +124,53 @@ class RingBackend(KVBackend):
     def _expire_dead_pages(self, st: SlotState, ln: int) -> None:
         dead_end = max(0, ln - self.window) // PAGE_TOKENS
         for p in range(st.live_from_page, dead_end):
+            bound = st.bound_from_page <= p < st.shared_pages
             for li in range(self.stored_layers()):
                 for stream in ("k", "v"):
-                    key = PageKey(st.rid, li, p, stream)
+                    key = self._slot_key(st, li, p, stream)
                     for tier, _cols in self._page_targets(key):
+                        if bound:
+                            # this holder's window slid past the shared
+                            # page: its binding ends here — sharing lasts
+                            # only while the prefix is inside every
+                            # holder's live window
+                            tier.store.release_page(key)
+                        # refused (and the page survives) while any OTHER
+                        # holder still has it bound
                         tier.store.drop_page(key)
             # its device rows now belong to a newer page: drop the ladder
             # entry so the plane map never applies a dead page's precision
             st.page_planes.pop(p, None)
         st.live_from_page = max(st.live_from_page, dead_end)
+        if st.shared_pages and dead_end > st.bound_from_page:
+            st.bound_from_page = min(dead_end, st.shared_pages)
 
     def _can_reactivate(self, st: SlotState, page_idx: int, ln: int) -> bool:
         # every device row of the page must still be inside the window
         return page_idx * PAGE_TOKENS >= max(0, ln - self.window)
+
+    # --------------------------------------------------------- prefix sharing
+    def _prefix_adopt_lo(self, m: int) -> int:
+        # the ring only holds the trailing `window` rows; adoption rebuilds
+        # exactly those (registered prefixes fit the window — see
+        # _prefix_register_ok — so in practice lo == 0)
+        return max(0, m - self.window)
+
+    def _prefix_register_ok(self, st: SlotState, end: int) -> bool:
+        # a prompt longer than the window has already overwritten its own
+        # head rows: there is nothing complete left to snapshot, and a
+        # follower could never share pages outside its live window anyway
+        return end <= self.window
+
+    def _adopt_prefix_rows(self, slot_id, entry, lo: int, m: int) -> None:
+        super()._adopt_prefix_rows(slot_id, entry, lo, m)
+        # ring rows are position-masked, not index-ordered: publish the
+        # adopted rows' absolute positions or the mask treats them as
+        # unfilled (bind_slot reset them to -1)
+        rows = self._device_rows(lo, m)
+        self._cache["pos"] = self._cache["pos"].at[:, slot_id, rows].set(
+            jnp.arange(lo, m, dtype=jnp.int32)
+        )
 
     # ------------------------------------------------------ device plane map
     def _device_page(self, page_idx: int) -> int:

@@ -118,12 +118,14 @@ class ShardedBackend(KVBackend):
         shards = []
         for tier in self.tiers:
             er = tier.engine.report()
+            fp = tier.store.footprint()
             shards.append({
                 "shard": tier.index,
                 "kv_logical_bytes": tier.controller.stats.kind_bytes("kv_write")[0],
                 "kv_stored_bytes": tier.controller.stats.kind_bytes("kv_write")[1],
                 "kv_fetch_physical": tier.controller.stats.kind_bytes("kv_read")[1],
-                "kv_evictions": tier.store.footprint()["evictions"],
+                "kv_evictions": fp["evictions"],
+                "shared_stored_bytes": fp["shared_stored_bytes"],
                 "engine_utilization": er["utilization"],
                 "engine_modeled_latency_ns": er["modeled_latency_ns"],
             })

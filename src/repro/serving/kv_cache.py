@@ -22,13 +22,36 @@ Continuous-batching additions (ISSUE 1):
 * **Ladder plane hints.** ``set_planes`` records the precision the dynamic
   quantization ladder assigned to a page; ``account_fetch`` charges exactly
   those planes' compressed bytes per decode-step read (Fig. 5 semantics).
+
+Shared-prefix pages (ISSUE 10):
+
+* **Content-addressed prompt pages.** Under ``EngineConfig.prefix_sharing``
+  the backends key every FULL prompt page by a rolling hash of its
+  token-id chain (:func:`page_chain_hashes`) instead of the request id —
+  two prompts sharing a page-aligned prefix share the same page keys, so
+  the prefix's compressed bytes are stored once no matter how many
+  requests hold it.  Decode/tail pages stay request-keyed: divergence is
+  copy-on-write at page granularity for free, because a diverging chunk
+  changes the chain hash and therefore the key.
+* **Refcount binding.** A request admitted via a prefix match *binds* the
+  matched pages (``retain_page``/``release_page``) instead of re-writing
+  them.  A bound page (refcount > 0) is never a budget-eviction victim and
+  ``drop_page`` refuses to retire it (a ring holder sliding past a page
+  another holder still reads must not kill it); among refcount-0 pages the
+  LRU sweep prefers request-keyed (unshared) victims so the prefix cache
+  is the last thing pressure reclaims.
+* **:class:`PrefixIndex`.** The submit-time matcher: maps each page's
+  chain hash to its registered :class:`PrefixEntry` (token ids for
+  collision-proof verification + the full-layer device KV snapshot that
+  lets a joining slot adopt the prefix rows without re-running prefill).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,6 +60,42 @@ from repro.core.compressed_store import StoreConfig
 from repro.core.controller import MemoryController
 
 PAGE_TOKENS = 16
+
+#: seq-id namespace of content-addressed shared-prefix pages — disjoint
+#: from integer request ids, so ``drop_sequence(rid)`` can never touch a
+#: shared page and a prefix key can never collide with a request key
+PREFIX_SEQ = "px:"
+
+#: chain seed: hashes are versioned so a future page-format change cannot
+#: silently match pages written by an older layout
+_CHAIN_SEED = b"repro-prefix-v1"
+
+
+def prefix_seq_id(digest: str) -> str:
+    """Store seq-id for the shared page whose chain hash is ``digest``."""
+    return PREFIX_SEQ + digest
+
+
+def is_prefix_seq(seq_id) -> bool:
+    """Whether a page-key seq-id names a shared (content-addressed) page."""
+    return isinstance(seq_id, str) and seq_id.startswith(PREFIX_SEQ)
+
+
+def page_chain_hashes(tokens: np.ndarray) -> List[str]:
+    """Rolling hash per FULL page of ``tokens``: ``h[i]`` digests pages
+    [0, i] of the token-id stream, so equal hashes mean equal page-aligned
+    prefixes (verified against raw ids on match — the hash only routes).
+    A ragged tail (< PAGE_TOKENS tokens) gets no hash: only full pages are
+    ever shared."""
+    arr = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    out: List[str] = []
+    prev = _CHAIN_SEED
+    for p in range(len(arr) // PAGE_TOKENS):
+        chunk = arr[p * PAGE_TOKENS:(p + 1) * PAGE_TOKENS].tobytes()
+        d = hashlib.blake2b(prev + chunk, digest_size=8).digest()
+        prev = d
+        out.append(d.hex())
+    return out
 
 
 def iter_page_chunks(kv: np.ndarray, first_page: int = 0):
@@ -96,11 +155,18 @@ class CompressedKVStore:
         self.engine = engine
         self._lru: "OrderedDict[Tuple, int]" = OrderedDict()  # key -> stored bytes
         self._planes: Dict[Tuple, int | None] = {}  # ladder hints
+        #: shared-prefix binding counts — a key is bound while a live request
+        #: reads it without owning it; survives _forget (binding is a property
+        #: of the requests, not of residency)
+        self._refcounts: Dict[Tuple, int] = {}
         self._logical = 0
         self._stored = 0
+        self._shared_stored = 0
+        self._shared_pages = 0
         self.counters = {
             "evictions": 0, "evicted_bytes": 0,
             "hits": 0, "misses": 0, "reactivations": 0,
+            "shared_evictions": 0,
         }
 
     # ------------------------------------------------------------------ pages
@@ -124,6 +190,9 @@ class CompressedKVStore:
         self._planes[kt] = planes
         self._logical += ct.valid_logical_bytes
         self._stored += ct.stored_bytes
+        if is_prefix_seq(kt[0]):
+            self._shared_stored += ct.stored_bytes
+            self._shared_pages += 1
         self._enforce_budget(protect=kt)
 
     def get_page(self, key: PageKey, keep_planes: int | None = None) -> np.ndarray:
@@ -167,7 +236,7 @@ class CompressedKVStore:
         the bit-plane device path closes)."""
         return self.controller.kv_page(key.astuple()).valid_logical_bytes
 
-    def fetch_plan(self, key: PageKey) -> Tuple[int, int]:
+    def fetch_plan(self, key: PageKey, keep="ladder") -> Tuple[int, int]:
         """(engine bytes, plane count) for a fetch resolved *now*.
 
         The memctl runtime calls this once, at service start (via the job's
@@ -175,10 +244,15 @@ class CompressedKVStore:
         charge always use the same ladder assignment even when the ladder
         re-ranks between submit and service.  Lane throughput is rated on
         the decompressed side (512 Gb/s), so a partial-plane fetch costs
-        planes/bits of the pad-free logical page."""
+        planes/bits of the pad-free logical page.
+
+        ``keep`` overrides the store's ladder hint (shared-prefix pages:
+        each holder fetches at ITS ladder assignment, not whichever holder
+        wrote the hint last); the default reads the hint as before."""
         kt = key.astuple()
         ct = self.controller.kv_page(kt)
-        keep = self._planes.get(kt)
+        if keep == "ladder":
+            keep = self._planes.get(kt)
         if keep is None:
             return ct.valid_logical_bytes, ct.spec.bits
         return (max(1, round(ct.valid_logical_bytes * keep / ct.spec.bits)),
@@ -216,12 +290,49 @@ class CompressedKVStore:
         """Forget one page without eviction accounting — ring tiers retire
         pages that slid fully out of the attention window.  Like sequence
         retirement, the drop moves no bus bytes (the page is dead, not
-        cold); returns whether the page was resident."""
+        cold); returns whether the page was dropped.  A page still bound
+        by another holder (refcount > 0) is NOT dead and the drop is
+        refused — the last holder's release retires it."""
         kt = key.astuple()
+        if self._refcounts.get(kt, 0) > 0:
+            return False
         if kt not in self._lru:
             return False
         self._forget(kt)
         return True
+
+    # ------------------------------------------------------------- refcounts
+    def retain_page(self, key: PageKey) -> int:
+        """Bind a shared page to one more live holder; returns the new
+        refcount.  Bound pages are immune to budget eviction and
+        :meth:`drop_page` until released back to zero."""
+        kt = key.astuple()
+        n = self._refcounts.get(kt, 0) + 1
+        self._refcounts[kt] = n
+        if kt in self._lru:
+            self._lru.move_to_end(kt)
+        return n
+
+    def release_page(self, key: PageKey) -> int:
+        """Drop one holder's binding; returns the remaining refcount.  The
+        page stays resident at refcount 0 (it is the prefix *cache*) but
+        becomes evictable again."""
+        kt = key.astuple()
+        n = self._refcounts.get(kt, 0)
+        if n <= 1:
+            self._refcounts.pop(kt, None)
+            return 0
+        self._refcounts[kt] = n - 1
+        return n - 1
+
+    def page_refcount(self, key: PageKey) -> int:
+        return self._refcounts.get(key.astuple(), 0)
+
+    def page_stored_bytes(self, key: PageKey) -> int:
+        """Compressed bytes a resident page occupies (0 if evicted) — the
+        dedup ledger: what a prefix-matched request would otherwise have
+        re-stored."""
+        return self._lru.get(key.astuple(), 0)
 
     def sequence_pages(self, seq_id: int) -> list:
         return [k for k in self._lru if k[0] == seq_id]
@@ -238,23 +349,40 @@ class CompressedKVStore:
         self._planes.pop(kt, None)
         ct = self.controller.drop_kv_page(kt)
         self._stored -= stored
+        if is_prefix_seq(kt[0]):
+            self._shared_stored -= stored
+            self._shared_pages -= 1
         if ct is not None:
             self._logical -= ct.valid_logical_bytes
+
+    def _pick_victim(self, protect: Tuple) -> Tuple | None:
+        """Coldest evictable page: never ``protect`` (the page being
+        written), never a bound page (refcount > 0 — a live request reads
+        it), and among evictable pages an unshared (request-keyed) one
+        wins over a refcount-0 shared page at any temperature, so the
+        prefix cache is reclaimed only once per-request pages are gone."""
+        fallback = None
+        for kt in self._lru:
+            if kt == protect or self._refcounts.get(kt, 0) > 0:
+                continue
+            if not is_prefix_seq(kt[0]):
+                return kt
+            if fallback is None:
+                fallback = kt
+        return fallback
 
     def _enforce_budget(self, protect: Tuple) -> None:
         if self.max_stored_bytes is None:
             return
         while self._stored > self.max_stored_bytes and len(self._lru) > 1:
-            victim = next(iter(self._lru))
-            if victim == protect:
-                # never evict the page being written; try the next-coldest
-                victims = iter(self._lru)
-                next(victims)
-                try:
-                    victim = next(victims)
-                except StopIteration:
-                    return
+            victim = self._pick_victim(protect)
+            if victim is None:
+                # everything else is bound by live requests — over-budget
+                # residency is the lesser evil vs. killing pages in use
+                return
             stored = self._lru[victim]
+            if is_prefix_seq(victim[0]):
+                self.counters["shared_evictions"] += 1
             self._forget(victim)
             self.counters["evictions"] += 1
             self.counters["evicted_bytes"] += stored
@@ -276,5 +404,98 @@ class CompressedKVStore:
             "ratio": self._logical / max(1, self._stored),
             "saving": 1.0 - self._stored / max(1, self._logical),
             "budget_bytes": self.max_stored_bytes,
+            "shared_pages": self._shared_pages,
+            "shared_stored_bytes": self._shared_stored,
+            "bound_pages": sum(1 for n in self._refcounts.values() if n > 0),
             **self.counters,
         }
+
+
+# ---------------------------------------------------------------- prefix index
+@dataclasses.dataclass
+class PrefixEntry:
+    """One registered shareable prefix.
+
+    ``tokens`` are the raw prompt ids the hashes digest (matching verifies
+    against them, so an 8-byte hash collision can never cross-wire two
+    prompts).  ``k``/``v`` are full-layer bf16 host snapshots of the
+    prefix's device KV rows, ``(n_layers, end_token - r0_token, channels)``,
+    starting at absolute token ``r0_token`` (> 0 on ring backends, where
+    only the trailing window's rows still exist): a matching slot adopts
+    these rows into its device cache instead of re-running prefill."""
+
+    tokens: np.ndarray          # (end_token,) int32 prompt prefix
+    hashes: List[str]           # chain hashes, one per full page
+    r0_token: int               # first token covered by the snapshot
+    k: np.ndarray               # (n_layers, end - r0, channels) bf16
+    v: np.ndarray
+
+
+class PrefixIndex:
+    """Maps page chain-hashes to registered prefixes (LRU over entries).
+
+    One index per backend.  ``match`` walks a new prompt's page hashes to
+    the longest registered page-aligned prefix; the caller then checks
+    store residency / window feasibility and binds refcounts.  Entries
+    are whole registered prefixes, but lookup is per *page* hash — a long
+    registered prefix serves shorter matches at any page boundary, which
+    is what makes divergence mid-stream copy-on-write."""
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
+        self._pages: Dict[str, PrefixEntry] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def has_page(self, h: str) -> bool:
+        return h in self._pages
+
+    def register(self, entry: PrefixEntry) -> bool:
+        """Index a finished prefill's prefix; returns whether it was new.
+        A prefix whose final page hash is already indexed is a duplicate
+        (same token chain) and is skipped."""
+        if not entry.hashes:
+            return False
+        last = entry.hashes[-1]
+        if last in self._entries:
+            self._entries.move_to_end(last)
+            return False
+        self._entries[last] = entry
+        for h in entry.hashes:
+            # longest registration wins a page slot only if unclaimed —
+            # any entry covering a hash serves it identically (same chain)
+            self._pages.setdefault(h, entry)
+        while len(self._entries) > self.max_entries:
+            _, old = self._entries.popitem(last=False)
+            for h in old.hashes:
+                if self._pages.get(h) is old:
+                    del self._pages[h]
+        return True
+
+    def match(self, prompt: np.ndarray, hashes: List[str],
+              max_pages: int | None = None) -> Tuple[int, Optional[PrefixEntry]]:
+        """Longest indexed page-aligned prefix of ``prompt``.
+
+        ``hashes`` is ``page_chain_hashes(prompt)`` (possibly truncated by
+        the caller); ``max_pages`` caps the match length further.  Returns
+        ``(matched_pages, entry)`` — entry ``None`` when nothing matched.
+        Token ids are verified against the entry so hash collisions fail
+        closed (no match) instead of serving a stranger's KV."""
+        n = len(hashes)
+        if max_pages is not None:
+            n = min(n, max_pages)
+        m = 0
+        while m < n and hashes[m] in self._pages:
+            m += 1
+        while m > 0:
+            entry = self._pages[hashes[m - 1]]
+            t = m * PAGE_TOKENS
+            if (len(entry.tokens) >= t
+                    and np.array_equal(np.asarray(prompt[:t], np.int32),
+                                       np.asarray(entry.tokens[:t], np.int32))):
+                self._entries.move_to_end(entry.hashes[-1])
+                return m, entry
+            m -= 1  # collision: back off a page and re-verify
+        return 0, None

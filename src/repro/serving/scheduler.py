@@ -99,6 +99,12 @@ class Request:
     #: per-request sampling seed (None = the scheduler's base stream);
     #: affects ONLY this request's stream, never in-flight neighbours
     rng_seed: Optional[int] = None
+    #: rejected at submit by the load-shedding policy
+    #: (``EngineConfig.shed_latency_ns_max``): ``done`` with no output, and
+    #: ``shed_reason`` says why — callers retry elsewhere/later instead of
+    #: growing an unserviceable queue
+    shed: bool = False
+    shed_reason: str = ""
     # --- scheduler bookkeeping (filled in as the request moves through) ---
     arrival_step: int = -1  # step submit() saw it
     admit_step: int = -1  # step it won a slot
@@ -180,6 +186,30 @@ class EngineConfig:
     #: this many ns (None = admit regardless, the pre-backpressure
     #: behaviour)
     admit_latency_ns_max: Optional[float] = None
+    #: load-shedding threshold (ISSUE 10 satellite): REJECT a request at
+    #: ``submit()`` — ``req.shed = True`` with a reason, never enqueued —
+    #: when ``backend.admit_pressure_ns()`` already exceeds this.  Unlike
+    #: ``admit_latency_ns_max`` (which parks requests in the queue until
+    #: the lanes catch up), shedding bounds queueing delay: a caller with
+    #: an SLO learns NOW that this engine cannot meet it.  None = never
+    #: shed (the pre-policy behaviour).
+    shed_latency_ns_max: Optional[float] = None
+    #: shared-prefix KV pages (ISSUE 10): key full prompt pages by a
+    #: rolling content hash so requests sharing a page-aligned prefix
+    #: store its KV once; a new prompt's longest indexed prefix is adopted
+    #: at its first prefill tick (pages bound by refcount, prefill chunks
+    #: skipped, decode diverges copy-on-write at page granularity).
+    #: Default OFF — page keys, eviction order and accounting are then
+    #: bit-identical to the pre-prefix scheduler.  Honours the
+    #: REPRO_PREFIX_SHARING env var (CI leg), mirroring
+    #: REPRO_SERVING_BACKEND.
+    prefix_sharing: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_PREFIX_SHARING",
+                                               "0") == "1"
+    )
+    #: LRU capacity of the prefix index (registered distinct prefixes,
+    #: each holding a host snapshot of its device KV rows for adoption)
+    prefix_index_entries: int = 128
     #: serving telemetry (ISSUE 7): request-lifecycle spans, per-step
     #: structured events, memctl lane timelines, and the
     #: Perfetto/Prometheus exporters they feed.  None (the default) wires
@@ -219,6 +249,10 @@ class _Slot:
     draws: int = 0  # tokens sampled so far from this stream
     prefill_pos: int = 0  # prompt tokens already appended to the slot rows
     prefilling: bool = True  # still consuming prompt chunks (no decode yet)
+    #: prefix-index lookup already ran for this slot (it runs exactly once,
+    #: at the slot's first prefill tick — after same-step earlier slots
+    #: have had a chance to register their own prefixes)
+    prefix_checked: bool = False
 
 
 def prefill_buckets(max_ctx: int) -> List[int]:
@@ -303,6 +337,12 @@ class ContinuousScheduler:
                 f"decode_kernel must be 'fused' or 'rung', "
                 f"got {cfg.decode_kernel!r}"
             )
+        if cfg.prefix_sharing and cfg.prefill_mode == "padded":
+            raise ValueError(
+                "prefix_sharing requires prefill_mode='bucketed': padded "
+                "admission runs one monolithic prefill inside _admit, so "
+                "there is no chunk schedule to skip matched pages from"
+            )
         if cfg.prefill_mode == "bucketed" and cfg.max_ctx % PAGE_TOKENS != 0:
             # a ragged final bucket landing near the cache end would be
             # CLAMPED by dynamic_update_slice and silently overwrite earlier
@@ -327,6 +367,7 @@ class ContinuousScheduler:
             "engine_jobs_cancelled": 0,
             "kv_peak_stored_bytes": 0, "kv_peak_logical_bytes": 0,
             "admits_deferred": 0, "backpressure_steps": 0,
+            "requests_shed": 0, "prefill_chunks_skipped": 0,
             "prefill_s": 0.0, "decode_s": 0.0,
         }
         # the memory tier: store(s) + controller(s) + lane engine(s) live
@@ -395,6 +436,22 @@ class ContinuousScheduler:
                 f"max_ctx {self.cfg.max_ctx}"
             )
         req.arrival_step = self.step_count
+        lim = self.cfg.shed_latency_ns_max
+        if lim is not None:
+            pressure = self.backend.admit_pressure_ns()
+            if pressure > lim:
+                # reject-with-reason instead of unbounded queueing: the
+                # request is done (no output), never enqueued, no span
+                req.done = True
+                req.shed = True
+                req.shed_reason = (
+                    f"admission rejected: modeled engine backlog "
+                    f"{pressure:.0f}ns exceeds shed_latency_ns_max "
+                    f"{lim:.0f}ns"
+                )
+                req.finish_step = self.step_count
+                self.stats["requests_shed"] += 1
+                return
         self._waiting.append(req)
         self.stats["requests_submitted"] += 1
         if self.telemetry.enabled:
@@ -543,6 +600,20 @@ class ContinuousScheduler:
         for slot_id, slot in enumerate(self._slots):
             if slot is None or not slot.prefilling:
                 continue
+            if not slot.prefix_checked:
+                # shared-prefix adoption (EngineConfig.prefix_sharing; the
+                # backend returns 0 when sharing is off or nothing
+                # matched): matched pages are already bound + on device,
+                # so prefill starts at the divergence page — the matched
+                # chunks are SKIPPED, never computed, stored or charged
+                slot.prefix_checked = True
+                m = self.backend.match_prefix(slot_id, slot.prompt)
+                if m:
+                    slot.prefill_pos = m
+                    self._lens[slot_id] = m
+                    self.stats["prefill_chunks_skipped"] += len(
+                        chunk_schedule(m, self._buckets)
+                    )
             budget = (max(1, self.cfg.prefill_chunks_per_step)
                       if decode_live else len(slot.prompt))
             while slot.prefilling and budget > 0:
@@ -753,6 +824,7 @@ class ContinuousScheduler:
                 "decode_tokens": s["decode_tokens"] * per,
                 "requests_truncated": s["requests_truncated"] * per,
                 "admits_deferred": s["admits_deferred"] * per,
+                "requests_shed": s["requests_shed"] * per,
             }
         if self.telemetry.enabled:
             # span-derived latency quantiles (both clock domains) + the

@@ -205,6 +205,45 @@ class TestAccountingWeightStream:
         assert_clean(self.rule, good, "src/repro/serving/backends/base.py")
 
 
+class TestAccountingPrefixRefcount:
+    rule = "accounting-prefix-refcount"
+    bad = ("def f(store, key):\n"
+           "    store.retain_page(key)\n"
+           "    store.release_page(key)\n"
+           "    store.drop_page(key)\n"
+           "    store._refcounts[key] = 3\n"
+           "    store._refcounts = {}\n")
+
+    def test_lifecycle_calls_fire_in_scheduler(self):
+        fs = assert_fires(self.rule, self.bad, SCHED_PATH)
+        assert {f.line for f in fs} == {2, 3, 4, 5, 6}
+        assert_suppressible(self.rule, self.bad, SCHED_PATH)
+
+    def test_augassign_refcount_write_fires(self):
+        bad = ("def f(store, key):\n"
+               "    store._refcounts[key] += 1\n")
+        assert_fires(self.rule, bad, "src/repro/serving/traces.py")
+
+    def test_store_and_backends_are_allowed(self):
+        for allowed in ("src/repro/serving/kv_cache.py",
+                        "src/repro/serving/backends/base.py",
+                        "src/repro/serving/backends/ring.py",
+                        "src/repro/memctl/runtime.py",
+                        "src/repro/core/compressed_store.py"):
+            assert_clean(self.rule, self.bad, allowed)
+
+    def test_tests_and_benchmarks_are_exempt(self):
+        # eviction/refcount unit tests legitimately drive the store API
+        assert_clean(self.rule, self.bad, "tests/test_prefix_sharing.py")
+        assert_clean(self.rule, self.bad, "benchmarks/serving_prefix.py")
+
+    def test_reading_refcounts_is_clean(self):
+        good = ("def f(store, key):\n"
+                "    n = store.page_refcount(key)\n"
+                "    return n, store.page_stored_bytes(key)\n")
+        assert_clean(self.rule, good, SCHED_PATH)
+
+
 # ---------------------------------------------------------------------------
 # telemetry gating
 # ---------------------------------------------------------------------------

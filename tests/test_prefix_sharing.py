@@ -1,0 +1,452 @@
+"""Shared-prefix KV pages (ISSUE 10): conformance + accounting suite.
+
+The tentpole's whole contract, pinned:
+
+* sharing is a MEMORY policy — tokens with prefix sharing ON are
+  bit-identical to OFF on every backend (paged, sharded(2), ring),
+  including mid-page divergence and a ring prompt longer than the window;
+* the store holds ONE copy of a shared prefix no matter how many
+  requests bind it (stored bytes independent of the holder count);
+* refcounts gate eviction: a bound page is never evicted or dropped,
+  an unshared page is always preferred over a refcount-0 shared page,
+  and the exactly-once kv_write accounting survives eviction thrash
+  with sharing ON;
+* a prefix-joined request draws from the SAME sampling stream as a cold
+  one (``fold_in(base, rid)`` — skipping prefill chunks must not shift
+  the stream);
+* traces (``repro.serving.traces``) are deterministic from their seed.
+
+Wave discipline: followers are submitted AFTER the donor's prefill has
+registered the prefix (registration flushes after the prefill tick), so
+each test drains the donor first — a synchronized wave would miss by
+design and prove nothing.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core.quantization import PrecisionLadder
+from repro.memctl import MemCtlConfig
+from repro.models.model import build_model
+from repro.serving import ContinuousScheduler, EngineConfig, Request
+from repro.serving.kv_cache import (
+    PAGE_TOKENS,
+    CompressedKVStore,
+    PageKey,
+    PrefixEntry,
+    PrefixIndex,
+    is_prefix_seq,
+    page_chain_hashes,
+    prefix_seq_id,
+)
+from repro.serving.sampler import SamplerConfig
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def ring_model():
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              attn_window=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompt(n, offset=0):
+    return ((np.arange(n) + offset) % 500).astype(np.int32)
+
+
+def _cfg(backend="paged", shards=1, sharing=True, **kw):
+    return EngineConfig(max_batch=4, max_ctx=192, backend=backend,
+                        shards=shards, store_layers=2,
+                        prefix_sharing=sharing, **kw)
+
+
+def _serve_waves(model, params, cfg, waves, max_new=8):
+    """Submit wave 0, drain, submit wave 1, drain, ... — so followers
+    always arrive after the donor wave's prefixes are registered."""
+    sched = ContinuousScheduler(model, params, cfg)
+    reqs, rid = [], 0
+    for wave in waves:
+        batch = []
+        for prompt, n_new in wave:
+            r = Request(rid=rid, prompt=prompt,
+                        max_new_tokens=n_new if n_new else max_new)
+            sched.submit(r)
+            batch.append(r)
+            rid += 1
+        sched.run_until_drained()
+        assert all(r.done for r in batch)
+        reqs.extend(batch)
+    return sched, reqs
+
+
+# a 4-page shared system prompt; followers append distinct tails
+SHARED = _prompt(4 * PAGE_TOKENS, 7)
+
+
+def _family_waves(tails=(3, 11, 29)):
+    """Donor wave (shared prefix + tail 0) then a follower wave with
+    distinct tails — including one that diverges MID-page (same first
+    pages, different content inside page 2)."""
+    donor = np.concatenate([SHARED, _prompt(9, 100)])
+    diverge_mid = SHARED.copy()
+    diverge_mid[2 * PAGE_TOKENS + 5] += 1  # mid-page-2 divergence
+    followers = [np.concatenate([SHARED, _prompt(13, 200 + t)])
+                 for t in tails]
+    followers.append(np.concatenate([diverge_mid, _prompt(5, 400)]))
+    return [[(donor, 0)], [(f, 0) for f in followers]]
+
+
+# ---------------------------------------------------------------------------
+# Token conformance: ON is bit-identical to OFF, every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,shards",
+                         [("paged", 1), ("sharded", 2), ("ring", 1)])
+def test_sharing_on_matches_off_bit_identical(smoke_model, ring_model,
+                                              backend, shards):
+    """ISSUE 10 acceptance: greedy tokens with sharing ON equal OFF on
+    every backend, with real matches happening (mid-page divergence rides
+    along: a page differing inside its content hashes differently and is
+    simply not matched — copy-on-write for free)."""
+    model, params = (ring_model if backend == "ring" else smoke_model)
+    if backend == "ring":
+        # prompts must fit the 32-token window for registration: 1 shared
+        # page + short tails
+        shared = _prompt(PAGE_TOKENS, 7)
+        waves = [[(np.concatenate([shared, _prompt(6, 100)]), 0)],
+                 [(np.concatenate([shared, _prompt(9, 200)]), 0),
+                  (np.concatenate([shared, _prompt(11, 300)]), 0)]]
+        kw = dict(max_batch=2, max_ctx=96, backend="ring", store_layers=2)
+        on_cfg = EngineConfig(prefix_sharing=True, **kw)
+        off_cfg = EngineConfig(prefix_sharing=False, **kw)
+    else:
+        waves = _family_waves()
+        on_cfg = _cfg(backend, shards, sharing=True)
+        off_cfg = _cfg(backend, shards, sharing=False)
+
+    sched_on, reqs_on = _serve_waves(model, params, on_cfg, waves)
+    sched_off, reqs_off = _serve_waves(model, params, off_cfg, waves)
+    assert [r.output for r in reqs_on] == [r.output for r in reqs_off]
+    px = sched_on.report()["prefix"]
+    assert px["enabled"] and px["requests_matched"] > 0, px
+    assert px["bytes_deduplicated"] > 0
+    assert sched_off.report()["prefix"] == {"enabled": False}
+
+
+def test_mid_page_divergence_never_matches(smoke_model):
+    """A follower whose prompt differs INSIDE page 0 shares nothing: the
+    chain hash diverges at the corrupted page, so zero pages match and
+    the request prefills cold (and still decodes identically)."""
+    model, params = smoke_model
+    donor = np.concatenate([SHARED, _prompt(9, 100)])
+    poisoned = SHARED.copy()
+    poisoned[3] += 1  # inside page 0: whole chain diverges
+    follower = np.concatenate([poisoned, _prompt(9, 100)])
+    sched, reqs = _serve_waves(model, params, _cfg(),
+                               [[(donor, 0)], [(follower, 0)]])
+    px = sched.report()["prefix"]
+    assert px["requests_matched"] == 0
+    off_sched, off_reqs = _serve_waves(model, params, _cfg(sharing=False),
+                                       [[(donor, 0)], [(follower, 0)]])
+    assert [r.output for r in reqs] == [r.output for r in off_reqs]
+
+
+def test_ring_prompt_longer_than_window_never_registers(ring_model):
+    """Ring tier: a prompt whose prefix extends past the live window is
+    never registered (holders could not serve the dead pages), so later
+    identical prompts prefill cold — and tokens still match OFF exactly."""
+    model, params = ring_model
+    long_shared = _prompt(3 * PAGE_TOKENS, 7)  # 48 > window=32
+    waves = [[(np.concatenate([long_shared, _prompt(5, 100)]), 0)],
+             [(np.concatenate([long_shared, _prompt(7, 200)]), 0)]]
+    kw = dict(max_batch=2, max_ctx=96, backend="ring", store_layers=2)
+    on_sched, on_reqs = _serve_waves(
+        model, params, EngineConfig(prefix_sharing=True, **kw), waves)
+    off_sched, off_reqs = _serve_waves(
+        model, params, EngineConfig(prefix_sharing=False, **kw), waves)
+    assert [r.output for r in on_reqs] == [r.output for r in off_reqs]
+    px = on_sched.report()["prefix"]
+    assert px["requests_matched"] == 0
+    assert px["index_entries"] == 0  # nothing was ever registered
+
+
+def test_bitplane_device_path_matches_with_sharing(smoke_model):
+    """Adoption must also fill the bit-plane device cache correctly: the
+    packed-plane copy path serves bit-identical tokens to OFF."""
+    model, params = smoke_model
+    waves = _family_waves(tails=(3,))
+    kw = dict(device_kv="bitplane")
+    sched_on, on = _serve_waves(model, params, _cfg(sharing=True, **kw),
+                                waves)
+    _, off = _serve_waves(model, params, _cfg(sharing=False, **kw), waves)
+    assert [r.output for r in on] == [r.output for r in off]
+    assert sched_on.report()["prefix"]["requests_matched"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Dedup: stored bytes independent of holder count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,shards", [("paged", 1), ("sharded", 2)])
+def test_stored_bytes_independent_of_holder_count(smoke_model, backend,
+                                                  shards):
+    """ISSUE 10 acceptance: N requests sharing a prefix leave exactly the
+    bytes ONE copy of that prefix occupies — identical for N=1 and N=3
+    followers (the followers bind refcounts, they never re-store)."""
+    model, params = smoke_model
+
+    def shared_resident_bytes(n_followers):
+        waves = [[(np.concatenate([SHARED, _prompt(9, 100)]), 0)],
+                 [(np.concatenate([SHARED, _prompt(13, 200 + i)]), 0)
+                  for i in range(n_followers)]]
+        sched, _ = _serve_waves(model, params, _cfg(backend, shards), waves)
+        total = 0
+        for tier in sched.backend.tiers:
+            st = tier.store
+            total += sum(st._lru[kt] for kt in st._lru
+                         if is_prefix_seq(kt[0]))
+        px = sched.report()["prefix"]
+        assert px["requests_matched"] >= min(1, n_followers)
+        return total
+
+    one = shared_resident_bytes(1)
+    three = shared_resident_bytes(3)
+    assert one == three > 0
+
+
+# ---------------------------------------------------------------------------
+# Refcount-aware eviction (store level)
+# ---------------------------------------------------------------------------
+
+
+def _page(seed):
+    from repro.core.surrogates import logmag_kv_cache
+
+    return logmag_kv_cache(PAGE_TOKENS, 8, seed=seed)
+
+
+def test_bound_pages_are_immune_to_eviction_and_drop():
+    """A retained shared page survives budget pressure and refuses
+    drop_page until its last holder releases it."""
+    store = CompressedKVStore(max_stored_bytes=None)
+    px = PageKey(prefix_seq_id("aa"), 0, 0)
+    store.put_page(px, _page(0))
+    store.retain_page(px)
+    assert store.page_refcount(px) == 1
+    # tight budget: write request-keyed pages until something must go
+    store.max_stored_bytes = 3 * store.page_stored_bytes(px)
+    for i in range(6):
+        store.put_page(PageKey(1, 0, i), _page(i + 1))
+    assert store.page_stored_bytes(px) > 0  # bound page never evicted
+    assert store.footprint()["shared_evictions"] == 0
+    assert not store.drop_page(px)  # refused while bound
+    assert store.release_page(px) == 0
+    assert store.drop_page(px)  # last holder gone -> droppable
+
+
+def test_unshared_pages_evicted_before_refcount_zero_shared():
+    """Victim order: request-keyed pages go first at any temperature; a
+    refcount-0 shared page is reclaimed only once they are gone (counted
+    as a shared_eviction)."""
+    store = CompressedKVStore(max_stored_bytes=None)
+    px = PageKey(prefix_seq_id("bb"), 0, 0)
+    store.put_page(px, _page(0))  # refcount 0: evictable, but last resort
+    store.put_page(PageKey(1, 0, 0), _page(1))
+    per = store.page_stored_bytes(px)
+    store.max_stored_bytes = 2 * per + per // 2
+    # the store is over budget the moment this lands; the request-keyed
+    # page is older AND unshared — it must be the victim
+    store.put_page(PageKey(1, 0, 1), _page(2))
+    assert store.page_stored_bytes(PageKey(1, 0, 0)) == 0
+    assert store.page_stored_bytes(px) > 0
+    assert store.footprint()["shared_evictions"] == 0
+    # squeeze further: now only the shared page is left to reclaim
+    store.max_stored_bytes = per + per // 2
+    store.put_page(PageKey(1, 0, 2), _page(3))
+    assert store.page_stored_bytes(px) == 0
+    assert store.footprint()["shared_evictions"] == 1
+
+
+def test_eviction_thrash_kv_write_accounting_with_sharing(smoke_model):
+    """The exactly-once invariant under sharing: every kv_write on every
+    tier is one serviced KV_WRITE job or one serviced re-activation, even
+    while a tight budget thrashes pages around bound prefixes."""
+    model, params = smoke_model
+    cfg = _cfg(ladder=PrecisionLadder([(2, 16), (2, 8), (-1, 4)]),
+               max_stored_bytes=10 * 1024,
+               engine=MemCtlConfig(lanes=2, step_cycles=512),
+               weight_stream="resident")
+    waves = [[(np.concatenate([SHARED, _prompt(9, 100)]), 16)],
+             [(np.concatenate([SHARED, _prompt(13, 211)]), 16),
+              (np.concatenate([SHARED, _prompt(13, 222)]), 16)]]
+    sched, _ = _serve_waves(model, params, cfg, waves)
+    rep = sched.report()
+    assert rep["kv_evictions"] > 0  # the budget really thrashed
+    n_writes = sum(t.controller.stats.kind_count("kv_write")
+                   for t in sched.backend.tiers)
+    serviced = sum(t.engine.stats.serviced_jobs["KV_WRITE"]
+                   for t in sched.backend.tiers)
+    assert n_writes == serviced + rep["kv_reactivations"]
+
+
+# ---------------------------------------------------------------------------
+# Sampling-stream regression (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_joined_request_keeps_cold_sampling_stream(smoke_model):
+    """A matched request skips prefill chunks but must draw from the SAME
+    per-request stream (``fold_in(base, rid)``, draw numbers from 0) as a
+    cold run — pinned at temperature > 0 where any stream shift changes
+    tokens almost surely."""
+    model, params = smoke_model
+    sampler = SamplerConfig(temperature=0.8, top_k=8)
+    waves = _family_waves(tails=(3, 11))
+    sched_on, on = _serve_waves(model, params,
+                                _cfg(sharing=True, sampler=sampler), waves)
+    _, off = _serve_waves(model, params,
+                          _cfg(sharing=False, sampler=sampler), waves)
+    assert sched_on.report()["prefix"]["requests_matched"] > 0
+    assert [r.output for r in on] == [r.output for r in off]
+
+
+def test_explicit_rng_seed_survives_prefix_join(smoke_model):
+    """Same contract for a request-scoped seed (``submit(..., rng_seed)``):
+    the joined request's stream is the cold request's stream."""
+    model, params = smoke_model
+    sampler = SamplerConfig(temperature=1.1)
+    donor = np.concatenate([SHARED, _prompt(9, 100)])
+    probe = np.concatenate([SHARED, _prompt(13, 203)])
+
+    def run(sharing):
+        sched = ContinuousScheduler(
+            model, params, _cfg(sharing=sharing, sampler=sampler))
+        d = Request(rid=0, prompt=donor, max_new_tokens=6)
+        sched.submit(d)
+        sched.run_until_drained()
+        p = Request(rid=1, prompt=probe, max_new_tokens=10)
+        sched.submit(p, rng_seed=1234)
+        sched.run_until_drained()
+        return sched, p.output
+
+    sched_on, out_on = run(True)
+    _, out_off = run(False)
+    assert sched_on.report()["prefix"]["requests_matched"] == 1
+    assert out_on == out_off
+
+
+# ---------------------------------------------------------------------------
+# Prefix index unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_index_collision_fails_closed():
+    """Hash equality routes, token equality decides: an entry whose raw
+    tokens differ from the probe's (simulated collision) is never
+    matched."""
+    idx = PrefixIndex()
+    toks = _prompt(2 * PAGE_TOKENS)
+    hashes = page_chain_hashes(toks)
+    idx.register(PrefixEntry(tokens=toks, hashes=hashes, r0_token=0,
+                             k=None, v=None))
+    probe = toks.copy()
+    probe[5] += 1  # different tokens ...
+    m, entry = idx.match(probe, hashes, 2)  # ... same (forged) hashes
+    assert m == 0 and entry is None
+
+
+def test_prefix_index_lru_capacity():
+    idx = PrefixIndex(max_entries=2)
+    for i in range(3):
+        toks = _prompt(PAGE_TOKENS, 50 * i)
+        idx.register(PrefixEntry(tokens=toks,
+                                 hashes=page_chain_hashes(toks),
+                                 r0_token=0, k=None, v=None))
+    assert len(idx) == 2  # oldest entry fell off
+    oldest = page_chain_hashes(_prompt(PAGE_TOKENS, 0))
+    assert not idx.has_page(oldest[0])
+
+
+# ---------------------------------------------------------------------------
+# Traces (satellite): deterministic synthetic load
+# ---------------------------------------------------------------------------
+
+
+def test_traces_deterministic_and_classed():
+    from repro.serving import DEFAULT_CLASSES, make_trace
+
+    a = make_trace(32, kind="poisson", rate=0.5, seed=3)
+    b = make_trace(32, kind="poisson", rate=0.5, seed=3)
+    assert len(a) == len(b) == 32
+    for x, y in zip(a, b):
+        assert x.arrival_step == y.arrival_step and x.klass == y.klass
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+        assert x.request.max_new_tokens == y.request.max_new_tokens
+    # same class, same trace -> same shared prefix; chat's is page-aligned
+    chat = [t for t in a if t.klass == "chat"]
+    assert len(chat) >= 2
+    npage = dict((c.name, c.shared_prefix) for c in DEFAULT_CLASSES)["chat"]
+    assert npage % PAGE_TOKENS == 0
+    p0 = chat[0].request.prompt[:npage]
+    assert all(np.array_equal(t.request.prompt[:npage], p0) for t in chat)
+    # a different seed shares nothing
+    c = make_trace(32, kind="poisson", rate=0.5, seed=4)
+    chat_c = [t for t in c if t.klass == "chat"][0]
+    assert not np.array_equal(chat_c.request.prompt[:npage], p0)
+    # arrivals are sorted and n is respected for every arrival kind
+    for kind in ("poisson", "diurnal", "bursty"):
+        tr = make_trace(16, kind=kind, rate=0.5, seed=1, max_ctx=192)
+        steps = [t.arrival_step for t in tr]
+        assert steps == sorted(steps)
+        assert all(len(t.request.prompt) + t.request.max_new_tokens <= 192
+                   for t in tr)
+    with pytest.raises(ValueError, match="kind"):
+        make_trace(4, kind="flash-crowd")
+
+
+# ---------------------------------------------------------------------------
+# Reporting surface
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_report_shape(smoke_model):
+    model, params = smoke_model
+    sched, _ = _serve_waves(model, params, _cfg(), _family_waves((3,)))
+    px = sched.report()["prefix"]
+    for key in ("requests_matched", "tokens_matched", "pages_matched",
+                "bytes_deduplicated", "prefill_chunks_skipped", "hit_ratio",
+                "index_entries", "resident_shared_pages",
+                "resident_shared_bytes", "bound_pages", "shared_evictions"):
+        assert key in px, key
+    assert 0.0 < px["hit_ratio"] < 1.0
+    assert px["prefill_chunks_skipped"] == \
+        sched.stats["prefill_chunks_skipped"] > 0
+    assert px["bound_pages"] == 0  # everything retired -> all released
+
+
+def test_prefix_sharing_rejects_padded_prefill(smoke_model):
+    """Padded prefill admits right-padded prompts whose page content is
+    position-dependent — content addressing would be wrong, so the
+    combination refuses to build."""
+    model, params = smoke_model
+    with pytest.raises(ValueError, match="padded"):
+        ContinuousScheduler(
+            model, params,
+            EngineConfig(max_ctx=192, prefix_sharing=True,
+                         prefill_mode="padded"))

@@ -322,9 +322,12 @@ def test_bucketed_prefill_bounds_compiles_on_mixed_trace(smoke_model):
     lens = rng.integers(8, 200, 64)
 
     def run(mode):
+        # sharing pinned off: the padded baseline rejects prefix_sharing
+        # (no chunk schedule to skip from), and the comparison only counts
+        # prefill compiles/tokens, which sharing never changes here
         sched = ContinuousScheduler(model, params, EngineConfig(
             max_batch=8, max_ctx=256, store_kv_compressed=False,
-            prefill_mode=mode,
+            prefill_mode=mode, prefix_sharing=False,
         ))
         for i, n in enumerate(lens):
             sched.submit(Request(rid=i, prompt=_prompt(int(n), i),
@@ -348,9 +351,12 @@ def test_chunked_prefill_is_pad_free(smoke_model):
     bytes for the ragged tail."""
     model, params = smoke_model
     # paged pinned: the test round-trips full-channel pages against the
-    # device cache, which is a single-tier layout property
+    # device cache, which is a single-tier layout property; sharing pinned
+    # off because it round-trips via rid-keyed get_sequence, and prefix
+    # sharing stores full prompt pages under backend-held content keys
     sched = ContinuousScheduler(model, params, EngineConfig(
         max_batch=2, max_ctx=160, store_layers=2, backend="paged",
+        prefix_sharing=False,
     ))
     n = 37  # 2 full pages + a 5-token ragged tail
     req = Request(rid=0, prompt=_prompt(n), max_new_tokens=8)
@@ -509,3 +515,41 @@ def test_run_until_drained_services_engine_backlog(smoke_model):
     sched.run_until_drained()
     assert len(sched.engine.queue) == 0 and not sched.has_work()
     assert sched.engine.stats.serviced_bytes["BACKGROUND"] >= 64 * 1024
+
+
+def test_shed_latency_rejects_at_submit_with_reason(smoke_model):
+    """ISSUE 10 satellite: with the modeled engine backlog past
+    ``shed_latency_ns_max``, submit() rejects the request outright —
+    done, never enqueued, never decoded, with a reason naming both the
+    pressure and the bound — and counts it; once the backlog drains,
+    submissions admit normally again."""
+    from repro.memctl import MemCtlConfig
+
+    model, params = smoke_model
+    sched = ContinuousScheduler(model, params, EngineConfig(
+        max_batch=2, max_ctx=96, store_layers=2,
+        engine=MemCtlConfig(lanes=1, step_cycles=64),
+        shed_latency_ns_max=200.0,
+    ))
+    a = Request(rid=0, prompt=_prompt(80), max_new_tokens=8)
+    sched.submit(a)
+    for _ in range(3):
+        sched.step()  # build a real backlog on the tiny lane window
+    assert sched.backend.admit_pressure_ns() > 200.0
+    b = Request(rid=1, prompt=_prompt(40, 5), max_new_tokens=4)
+    sched.submit(b)
+    assert b.done and b.shed and b.output == []
+    assert "shed_latency_ns_max" in b.shed_reason
+    assert "exceeds" in b.shed_reason
+    rep_mid = sched.stats["requests_shed"]
+    assert rep_mid == 1
+    sched.run_until_drained()
+    assert a.done and not a.shed
+    # drained: the same request body admits now
+    c = Request(rid=2, prompt=_prompt(40, 5), max_new_tokens=4)
+    sched.submit(c)
+    sched.run_until_drained()
+    assert c.done and not c.shed and len(c.output) == 4
+    rep = sched.report()
+    assert rep["requests_shed"] == 1
+    assert rep["per_1k_requests"]["requests_shed"] > 0
